@@ -1,0 +1,80 @@
+"""Paper Tables 4.3–4.6: partition quality of the four combinations.
+
+For each (matrix × node-count f × combo): LB_nodes, LB_cores, modeled
+scatter/compute/gather phase costs (α-β model — hardware-independent
+comparison, the CPU container cannot reproduce Grid'5000 wall-times),
+plus the hypergraph cut. Emits CSV rows; `summary()` reproduces the
+paper's Table 4.7 win-rate synthesis (claim C4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.configs.paper_pmvc import COMBOS, CORES_PER_NODE, MATRICES, NODE_COUNTS
+from repro.core import two_level_partition
+from repro.sparse import generate, PAPER_SUITE
+
+__all__ = ["run", "summary"]
+
+
+def run(
+    matrices: Iterable[str] = ("bcsstm09", "thermal", "t2dal", "epb1"),
+    node_counts: Iterable[int] = (2, 8, 64),
+    cores: int = 4,
+    combos: Iterable[str] = COMBOS,
+    print_rows: bool = True,
+) -> List[Dict]:
+    rows: List[Dict] = []
+    if print_rows:
+        print("matrix,f,combo,lb_nodes,lb_cores,scatter,compute,gather,construct,total,cut,us_per_call")
+    for name in matrices:
+        a = generate(PAPER_SUITE[name])
+        for f in node_counts:
+            for combo in combos:
+                t0 = time.perf_counter()
+                plan = two_level_partition(a, f, cores, combo)
+                dt = (time.perf_counter() - t0) * 1e6
+                cost = plan.modeled_cost()
+                row = dict(
+                    matrix=name, f=f, combo=combo,
+                    lb_nodes=plan.lb_nodes, lb_cores=plan.lb_cores,
+                    cut=plan.hyper_cut, us_per_call=dt, **cost,
+                )
+                rows.append(row)
+                if print_rows:
+                    print(
+                        f"{name},{f},{combo},{plan.lb_nodes:.3f},{plan.lb_cores:.3f},"
+                        f"{cost['scatter']:.2e},{cost['compute']:.2e},{cost['gather']:.2e},"
+                        f"{cost['construct_y']:.2e},{cost['total']:.2e},{plan.hyper_cut},{dt:.0f}"
+                    )
+    return rows
+
+
+def summary(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
+    """Win-rate per combo per criterion — the paper's Table 4.7."""
+    crits = ("scatter", "compute", "construct_y", "gather", "total")
+    combos = sorted({r["combo"] for r in rows})
+    wins = {c: {k: 0 for k in crits} for c in combos}
+    cells = {}
+    for r in rows:
+        cells.setdefault((r["matrix"], r["f"]), []).append(r)
+    for group in cells.values():
+        for crit in crits:
+            best = min(group, key=lambda r: r[crit])
+            wins[best["combo"]][crit] += 1
+    n = max(len(cells), 1)
+    return {c: {k: v / n for k, v in w.items()} for c, w in wins.items()}
+
+
+def main() -> None:
+    rows = run()
+    print("\n# Table 4.7 analogue (win rates)")
+    for combo, w in summary(rows).items():
+        print(combo, {k: round(v, 2) for k, v in w.items()})
+
+
+if __name__ == "__main__":
+    main()

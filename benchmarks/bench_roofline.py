@@ -1,0 +1,64 @@
+"""§Roofline table: read the dry-run artifacts and print the per-cell
+three-term decomposition (single-pod mesh), dominant bottleneck, MFU,
+and useful-FLOP ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+__all__ = ["load_cells", "run", "table"]
+
+
+def load_cells(mesh: str = "pod16x16", tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("mesh") == mesh and cell.get("tag", "") == tag:
+            cells.append(cell)
+    return cells
+
+
+def table(cells: List[Dict], print_rows: bool = True) -> List[str]:
+    hdr = (
+        "arch,shape,status,dominant,compute_ms,memory_ms,collective_ms,"
+        "mfu,useful_ratio,hbm_GB_per_dev"
+    )
+    lines = [hdr]
+    for c in cells:
+        if c["status"] != "ok":
+            lines.append(f"{c['arch']},{c['shape']},{c['status']},,,,,,,")
+            continue
+        mem = c.get("memory", {})
+        hbm = (
+            mem.get("argument_bytes_per_device", 0)
+            + mem.get("temp_bytes_per_device", 0)
+        ) / 2**30
+        lines.append(
+            f"{c['arch']},{c['shape']},ok,{c['dominant']},"
+            f"{c['compute_term_s']*1e3:.2f},{c['memory_term_s']*1e3:.2f},"
+            f"{c['collective_term_s']*1e3:.2f},{c['mfu']:.3f},"
+            f"{c['useful_flop_ratio']:.2f},{hbm:.2f}"
+        )
+    if print_rows:
+        for l in lines:
+            print(l)
+    return lines
+
+
+def run(print_rows: bool = True) -> List[Dict]:
+    cells = load_cells()
+    if not cells:
+        print("# no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return []
+    table(cells, print_rows)
+    return cells
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV blocks:
+  1. Partition quality        (paper Tables 4.3–4.6 + Table 4.7 synthesis)
+  2. PMVC phase decomposition (paper Figures 4.16–4.55)
+  3. Kernel micro             (spBLAS level-2 analogue)
+  4. Roofline table           (§Roofline, from dry-run artifacts)
+"""
+from benchmarks import bench_kernels, bench_partition, bench_pmvc, bench_roofline
+
+
+def main() -> None:
+    print("# === 1. partition quality (Tables 4.3-4.6) ===")
+    rows = bench_partition.run()
+    print("\n# === Table 4.7 analogue: win rates per combo ===")
+    for combo, w in bench_partition.summary(rows).items():
+        print(f"{combo}," + ",".join(f"{k}={v:.2f}" for k, v in w.items()))
+
+    print("\n# === 2. PMVC phase decomposition (Figures 4.16-4.55) ===")
+    bench_pmvc.run()
+
+    print("\n# === 3. kernel micro ===")
+    bench_kernels.run()
+
+    print("\n# === 4. roofline table (from dry-run artifacts) ===")
+    bench_roofline.run()
+
+
+if __name__ == "__main__":
+    main()

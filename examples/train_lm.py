@@ -1,0 +1,82 @@
+"""End-to-end LM training driver with fault tolerance.
+
+Presets:
+  tiny  (default) — ~3M params, 100 steps, finishes in ~2 min on CPU.
+  100m            — ~100M-param qwen3-family config, a few hundred steps
+                    (the deliverable-scale run; several hours on this
+                    single-core container, minutes on one TPU host).
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 100
+"""
+import argparse
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig, get_arch
+from repro.data import DataConfig, SyntheticStream
+from repro.models import build
+from repro.models.common import count_params
+from repro.runtime import FaultInjector
+from repro.train import TrainLoop, make_train_step
+
+
+def preset_cfg(name: str):
+    base = get_arch("qwen3-1.7b")
+    if name == "tiny":
+        return dataclasses.replace(
+            base.reduced(), num_layers=4, d_model=128, d_ff=512, vocab_size=1024,
+        ), 64, 8
+    if name == "100m":
+        # ~100M params: 12L, d=768, ff=2304, vocab=32k (tied embeddings).
+        return dataclasses.replace(
+            base, name="qwen3-100m", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2304,
+            vocab_size=32768, dtype="float32",
+        ), 512, 8
+    raise ValueError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-fault-at", type=int, default=-1,
+                    help="simulate a worker failure at this step")
+    args = ap.parse_args()
+
+    cfg, seq_len, batch = preset_cfg(args.preset)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {count_params(params)/1e6:.1f}M params, "
+          f"seq={seq_len} batch={batch} steps={args.steps}")
+
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+                     learning_rate=3e-3, checkpoint_every=max(args.steps // 5, 1))
+    step_fn = jax.jit(make_train_step(model, tc))
+    dc = DataConfig(cfg.vocab_size, seq_len=seq_len, global_batch=batch, seed=0)
+
+    def batch_fn(step: int):
+        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=step)._batch_at(step))}
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    faults = (FaultInjector(schedule={args.inject_fault_at: 0})
+              if args.inject_fault_at >= 0 else None)
+    loop = TrainLoop(step_fn, batch_fn, tc, ckpt=ckpt, fault_injector=faults)
+    res = loop.run(params, num_steps=args.steps)
+
+    hist = res.metrics_history
+    for h in hist[:: max(len(hist) // 10, 1)]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.3f}  {h['sec']*1e3:.0f} ms")
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(restarts={res.restarts}, stragglers={res.straggler_steps})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager, flatten_tree, unflatten_tree
+__all__ = ["CheckpointManager", "flatten_tree", "unflatten_tree"]

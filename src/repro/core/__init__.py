@@ -1,0 +1,13 @@
+"""The paper's primary contribution: NEZGT + hypergraph two-level
+distribution of sparse computations (see DESIGN.md §1)."""
+from repro.core.nezgt import NezgtResult, nezgt_partition
+from repro.core.hypergraph import Hypergraph, HgResult, hypergraph_from_coo, partition_hypergraph, connectivity_cut
+from repro.core.combined import PAPER_COMBOS, TwoLevelPlan, two_level_partition, LevelSpec, partition_lines
+from repro.core.metrics import load_balance, fd, padding_waste, summarize_loads
+
+__all__ = [
+    "NezgtResult", "nezgt_partition", "Hypergraph", "HgResult",
+    "hypergraph_from_coo", "partition_hypergraph", "connectivity_cut",
+    "PAPER_COMBOS", "TwoLevelPlan", "two_level_partition", "LevelSpec",
+    "partition_lines", "load_balance", "fd", "padding_waste", "summarize_loads",
+]

@@ -1,0 +1,2 @@
+from repro.data.synthetic import DataConfig, SyntheticStream, make_batch, frontend_stub
+__all__ = ["DataConfig", "SyntheticStream", "make_batch", "frontend_stub"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot spots (validated in
+interpret mode on CPU; see tests/test_kernels_*.py for the shape/dtype
+sweeps against the jnp oracles).
+
+* ``spmv`` — Block-ELL PMVC (the paper's csr_double_mv, TPU-native)
+* ``gmm``  — grouped matmul for dropless MoE expert compute
+* ``attn`` — flash attention with causal / banded (SWA) block skipping
+"""
+from repro.kernels.spmv import spmv_shard, spmv_shard_ref
+from repro.kernels.gmm import grouped_matmul, gmm_ref, plan_groups
+from repro.kernels.attn import mha, flash_attention, attention_ref
+
+__all__ = [
+    "spmv_shard", "spmv_shard_ref", "grouped_matmul", "gmm_ref",
+    "plan_groups", "mha", "flash_attention", "attention_ref",
+]

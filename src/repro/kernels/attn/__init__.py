@@ -1,0 +1,3 @@
+from repro.kernels.attn.ops import mha, flash_attention, attention_ref
+
+__all__ = ["mha", "flash_attention", "attention_ref"]

@@ -1,0 +1,151 @@
+"""Pallas TPU flash attention with causal / banded (sliding-window) masks.
+
+The prefill hot spot. The sliding-window case is the paper's *matrice
+bande constante* (ch.1 §2.2) reappearing as an attention mask: with
+window ``w`` the score matrix is a banded sparse matrix of half-width
+``w``, and whole (bq × bkv) tiles outside the band are **skipped** under
+``pl.when`` — block sparsity at the grid level, exactly the PMVC
+empty-tile elision.
+
+Online-softmax state (m, l, acc) lives in VMEM scratch across the kv
+grid dimension (innermost); output is normalized and flushed at the last
+kv step. Grid: (batch·heads, q_blocks, kv_blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [1, bq, d]
+    k_ref,  # [1, bkv, d]
+    v_ref,  # [1, bkv, d]
+    o_ref,  # [1, bq, d]
+    m_ref,  # VMEM [bq, 128]
+    l_ref,  # VMEM [bq, 128]
+    acc_ref,  # VMEM [bq, d]
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bkv: int,
+):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * bq
+    k_start = j * bkv
+
+    # Block-level skip: is any (q, k) pair in this tile visible?
+    needed = True
+    if causal:
+        # Lowest q row of the block must not precede the first k column.
+        needed = jnp.logical_and(needed, q_start + bq - 1 >= k_start)
+    if window > 0:
+        # Band: q - k <= window  (plus causal upper edge handled above).
+        needed = jnp.logical_and(needed, q_start <= k_start + bkv - 1 + window)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bkv]
+
+        if causal or window > 0:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            mask = jnp.ones((bq, bkv), jnp.bool_)
+            if causal:
+                mask = jnp.logical_and(mask, rows >= cols)
+            if window > 0:
+                mask = jnp.logical_and(mask, rows - cols <= window)
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype),
+            v_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bkv", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # [BH, S, D]
+    k: jax.Array,  # [BH, T, D]
+    v: jax.Array,  # [BH, T, D]
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = unbounded; >0 = sliding-window half-width
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, d = q.shape
+    _, t, _ = k.shape
+    assert s % bq == 0 and t % bkv == 0, (s, t, bq, bkv)
+    scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bkv=bkv,
+    )
+    grid = (bh, s // bq, t // bkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Public flash-attention entry point with CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attn.kernel import flash_attention
+from repro.kernels.attn.ref import attention_ref
+
+__all__ = ["mha", "flash_attention", "attention_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Multi-head attention over flattened (batch·heads) leading dim.
+
+    On non-TPU backends defaults to the jnp reference (interpret-mode
+    Pallas is reserved for the kernel tests — it is orders of magnitude
+    slower than XLA:CPU for full models)."""
+    if not use_kernel or (not _on_tpu() and interpret is None):
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bkv=bkv,
+        interpret=bool(interpret) if interpret is not None else False,
+    )

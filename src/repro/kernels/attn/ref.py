@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # [BH, S, D]
+    k: jax.Array,  # [BH, T, D]
+    v: jax.Array,  # [BH, T, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d**0.5)
+    S, T = q.shape[1], k.shape[1]
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), jnp.bool_)
+    if causal:
+        mask = jnp.logical_and(mask, rows >= cols)
+    if window > 0:
+        mask = jnp.logical_and(mask, rows - cols <= window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.gmm.ops import gmm, gmm_ref, grouped_matmul, plan_groups
+
+__all__ = ["gmm", "gmm_ref", "grouped_matmul", "plan_groups"]

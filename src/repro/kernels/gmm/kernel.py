@@ -1,0 +1,84 @@
+"""Pallas TPU grouped matmul (GMM) — MoE expert compute.
+
+Dropless-MoE building block (megablocks-style, adapted to the MXU):
+rows of ``x`` are tokens *sorted by expert*, with every expert's group
+padded to a multiple of the row tile ``bm`` so each (bm × bk) x-tile
+belongs to exactly one expert. The expert id of every row-tile is
+scalar-prefetched and drives the data-dependent BlockSpec index into the
+stacked expert weights — the same "block-sparse operand selected by a
+prefetched plan" pattern as the PMVC kernel, which is precisely the
+paper's technique transplanted to expert parallelism (DESIGN.md §3).
+
+Grid: (m_tiles, n_tiles, k_tiles), k innermost; a VMEM accumulator
+carries partial products across k steps and flushes at k == nk-1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gmm"]
+
+
+def _gmm_kernel(
+    group_ref,  # scalar prefetch: [m_tiles] expert id per row tile
+    x_ref,  # [bm, bk]
+    w_ref,  # [1, bk, bn] (expert slice selected by group_ref)
+    o_ref,  # [bm, bn]
+    acc_ref,  # VMEM [bm, bn] f32
+):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype")
+)
+def gmm(
+    x: jax.Array,  # [M, K] tokens sorted by expert, M % bm == 0
+    w: jax.Array,  # [E, K, N] stacked expert weights
+    group_of_tile: jax.Array,  # [M // bm] int32 expert per row tile
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, kdim = x.shape
+    e, kw, n = w.shape
+    assert kdim == kw, (kdim, kw)
+    assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (m, kdim, n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bn, kdim // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, g: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, g: (g[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, g: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(group_of_tile, x, w)

@@ -1,0 +1,73 @@
+"""Public grouped-matmul entry + host-side dispatch planning.
+
+``plan_groups`` converts per-token expert assignments into the sorted
+layout + per-row-tile expert ids the kernel needs. The group padding that
+block-aligns each expert's token count is balanced by NEZGT over expert
+loads upstream (``repro.core.expert_placement``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gmm.kernel import gmm
+from repro.kernels.gmm.ref import gmm_ref
+
+__all__ = ["gmm", "gmm_ref", "grouped_matmul", "plan_groups"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    group_of_tile: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return gmm(
+        x,
+        w,
+        group_of_tile,
+        bm=bm,
+        bk=bk,
+        bn=bn,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+
+
+def plan_groups(
+    expert_of_token: np.ndarray, num_experts: int, bm: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side dispatch plan.
+
+    Returns ``(order, group_of_tile, padded_sizes)`` where ``order`` sorts
+    tokens by expert with per-expert padding to a ``bm`` multiple (padding
+    rows index ``-1`` — callers scatter zeros there), ``group_of_tile`` is
+    the per-row-tile expert id, and ``padded_sizes`` the padded token
+    count per expert.
+    """
+    counts = np.bincount(expert_of_token, minlength=num_experts)
+    padded = ((counts + bm - 1) // bm) * bm
+    padded = np.maximum(padded, bm)  # every expert gets >= one tile
+    offsets = np.zeros(num_experts + 1, dtype=np.int64)
+    np.cumsum(padded, out=offsets[1:])
+    order = np.full(int(offsets[-1]), -1, dtype=np.int64)
+    fill = offsets[:-1].copy()
+    for tok, e in enumerate(expert_of_token):
+        order[fill[e]] = tok
+        fill[e] += 1
+    group_of_tile = np.repeat(np.arange(num_experts, dtype=np.int32), padded // bm)
+    return order, group_of_tile, padded

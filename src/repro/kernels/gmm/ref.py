@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gmm_ref"]
+
+
+def gmm_ref(
+    x: jax.Array,  # [M, K]
+    w: jax.Array,  # [E, K, N]
+    group_of_tile: jax.Array,  # [M // bm]
+    *,
+    bm: int = 128,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    m, k = x.shape
+    tiles = x.reshape(m // bm, bm, k)
+    w_sel = w[group_of_tile]  # [m_tiles, K, N]
+    out = jnp.einsum(
+        "tmk,tkn->tmn",
+        tiles.astype(jnp.float32),
+        w_sel.astype(jnp.float32),
+    )
+    return out.reshape(m, w.shape[-1]).astype(out_dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.spmv.ops import spmv_shard, spmv_shard_ref, pack_inputs
+from repro.kernels.spmv.kernel import bell_spmv
+from repro.kernels.spmv.ref import bell_spmv_ref
+
+__all__ = ["spmv_shard", "spmv_shard_ref", "pack_inputs", "bell_spmv", "bell_spmv_ref"]

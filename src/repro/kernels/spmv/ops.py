@@ -1,0 +1,64 @@
+"""Jitted public entry points for the BELL SpMV kernel.
+
+``spmv_shard`` runs the Pallas kernel (interpret-mode on CPU, compiled on
+TPU); ``pack_inputs`` converts a host-side :class:`repro.sparse.bell
+.BellShard` into device arrays.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.bell import BellShard
+from repro.kernels.spmv.kernel import bell_spmv
+from repro.kernels.spmv.ref import bell_spmv_ref
+
+__all__ = ["spmv_shard", "pack_inputs", "spmv_shard_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_inputs(
+    shard: BellShard, x: np.ndarray, bn: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    ncb = -(-x.shape[0] // bn)
+    xp = np.zeros(ncb * bn, dtype=np.float32)
+    xp[: x.shape[0]] = x
+    return (
+        jnp.asarray(shard.tiles),
+        jnp.asarray(shard.tile_row),
+        jnp.asarray(shard.tile_col),
+        jnp.asarray(xp.reshape(ncb, bn)),
+    )
+
+
+def spmv_shard(
+    tiles: jax.Array,
+    tile_row: jax.Array,
+    tile_col: jax.Array,
+    x_blocks: jax.Array,
+    num_row_blocks: int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One shard's PMVC: returns the local y block ``[R, bm]``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bell_spmv(
+        tiles, tile_row, tile_col, x_blocks, num_row_blocks, interpret=interpret
+    )
+
+
+def spmv_shard_ref(
+    tiles: jax.Array,
+    tile_row: jax.Array,
+    tile_col: jax.Array,
+    x_blocks: jax.Array,
+    num_row_blocks: int,
+) -> jax.Array:
+    return bell_spmv_ref(tiles, tile_row, tile_col, x_blocks, num_row_blocks)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bell_spmv_ref"]
+
+
+def bell_spmv_ref(
+    tiles: jax.Array,  # [T, bm, bn]
+    tile_row: jax.Array,  # [T]
+    tile_col: jax.Array,  # [T]
+    x_blocks: jax.Array,  # [NCB, bn]
+    num_row_blocks: int,
+) -> jax.Array:
+    """y[r] = Σ_{t: tile_row[t]==r} tiles[t] @ x_blocks[tile_col[t]]."""
+    xb = x_blocks[tile_col]  # [T, bn]
+    contribs = jnp.einsum(
+        "tmn,tn->tm", tiles.astype(jnp.float32), xb.astype(jnp.float32)
+    )
+    y = jnp.zeros((num_row_blocks, tiles.shape[1]), jnp.float32)
+    return y.at[tile_row].add(contribs)

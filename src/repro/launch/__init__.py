@@ -1,0 +1,18 @@
+"""Launch layer: production meshes, sharding rules, dry-run, drivers.
+
+NOTE: do not import repro.launch.dryrun from here — it force-sets the
+XLA device-count flag at import time and must only be imported as the
+program entry point.
+"""
+from repro.launch.mesh import make_production_mesh, make_test_mesh, batch_axes_of
+from repro.launch.shardings import (
+    param_shardings, opt_shardings, batch_shardings, decode_state_shardings, param_spec,
+)
+from repro.launch.specs import input_specs, abstract_params, abstract_state, make_step_bundle
+
+__all__ = [
+    "make_production_mesh", "make_test_mesh", "batch_axes_of",
+    "param_shardings", "opt_shardings", "batch_shardings",
+    "decode_state_shardings", "param_spec", "input_specs",
+    "abstract_params", "abstract_state", "make_step_bundle",
+]

@@ -1,0 +1,302 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: AOT-compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — JAX locks the device
+count at first init. Everything below proves, without hardware, that the
+distribution config is coherent: ``.lower().compile()`` must succeed on
+the single-pod (16×16) and multi-pod (2×16×16) production meshes, and
+``memory_analysis`` / ``cost_analysis`` feed EXPERIMENTS.md §Dry-run and
+§Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    python -m repro.launch.dryrun --all            # every cell, both meshes
+    python -m repro.launch.dryrun --all --single-pod-only
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import SHAPES, get_arch, shape_applicable  # noqa: E402
+from repro.configs import ARCH_IDS  # noqa: E402
+from repro.launch.mesh import batch_axes_of, make_production_mesh  # noqa: E402
+from repro.launch.shardings import (  # noqa: E402
+    batch_shardings,
+    decode_state_shardings,
+    opt_shardings,
+    param_shardings,
+)
+from repro.launch.specs import make_step_bundle  # noqa: E402
+from repro.models.moe import MeshCtx  # noqa: E402
+from repro.roofline.analysis import model_flops, parse_collectives, roofline_terms  # noqa: E402
+from repro.config import TrainConfig  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _shardings_for(bundle, cfg, mesh, *, kv_fsdp: bool = False):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    if bundle.kind == "train":
+        params, opt, batch, rng = bundle.args
+        return (
+            param_shardings(params, cfg, mesh, kv_fsdp=kv_fsdp),
+            opt_shardings(opt, params, cfg, mesh, kv_fsdp=kv_fsdp),
+            batch_shardings(batch, mesh),
+            rep,
+        )
+    if bundle.kind == "prefill":
+        params, batch = bundle.args
+        return (
+            param_shardings(params, cfg, mesh, kv_fsdp=kv_fsdp),
+            batch_shardings(batch, mesh),
+        )
+    params, tokens, state = bundle.args
+    return (
+        param_shardings(params, cfg, mesh, kv_fsdp=kv_fsdp),
+        batch_shardings({"tokens": tokens}, mesh)["tokens"],
+        decode_state_shardings(state, cfg, mesh),
+    )
+
+
+OPTS = (
+    "kv_fsdp", "chunked_attn", "vocab_pad", "remat_none", "microbatch4",
+    "act_anchor", "moe_sort", "moe_a2a", "ssm_chunk64",
+)
+
+
+def _apply_opts(cfg, opts: set):
+    """Beyond-paper §Perf knobs applied to an (arch, shape) cell."""
+    import dataclasses
+
+    kw = {}
+    if "chunked_attn" in opts:
+        kw["chunked_attn"] = True
+    if "vocab_pad" in opts:
+        kw["vocab_pad_to"] = 256
+    if "act_anchor" in opts:
+        kw["act_anchor"] = True
+    if "moe_sort" in opts:
+        kw["moe_sort_dispatch"] = True
+    if "moe_a2a" in opts:
+        kw["moe_a2a"] = True
+    if "ssm_chunk64" in opts:
+        kw["ssm_chunk"] = 64
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _train_cfg_opts(train_cfg, opts: set):
+    import dataclasses
+
+    tc = train_cfg or TrainConfig(remat="dots")
+    if "remat_none" in opts:
+        tc = dataclasses.replace(tc, remat="none")
+    if "microbatch4" in opts:
+        tc = dataclasses.replace(tc, microbatches=4)
+    return tc
+
+
+def _with_layers(cfg, n: int):
+    import dataclasses
+
+    # scan_unroll: the cost probes must not hide per-layer work inside a
+    # while loop (XLA cost_analysis counts loop bodies once).
+    kw = {"num_layers": n, "scan_unroll": True}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n
+    return dataclasses.replace(cfg, **kw)
+
+
+def _compile_costs(cfg, shape, ctx, mesh, train_cfg, kv_fsdp=False):
+    """(flops, bytes, collective-wire-bytes) per device + compiled obj."""
+    bundle = make_step_bundle(cfg, shape, ctx, train_cfg)
+    in_sh = _shardings_for(bundle, cfg, mesh, kv_fsdp=kv_fsdp)
+    lowered = jax.jit(bundle.step_fn, in_shardings=in_sh).lower(*bundle.args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        coll,
+        compiled,
+        bundle,
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    train_cfg: Optional[TrainConfig] = None,
+    save: bool = True,
+    tag: str = "",
+    opts: Optional[set] = None,
+) -> dict:
+    opts = opts or set()
+    cfg = _apply_opts(get_arch(arch), opts)
+    train_cfg = _train_cfg_opts(train_cfg, opts)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+            "opts": sorted(opts)}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        if save:
+            _save(cell)
+        return cell
+
+    t0 = time.monotonic()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        ctx = MeshCtx(mesh, batch_axes_of(mesh))
+        chips = mesh.size
+
+        kv_fsdp = "kv_fsdp" in opts
+        # Full-depth compile: THE dry-run proof + memory analysis.
+        f_l, b_l, coll_l, compiled, bundle = _compile_costs(
+            cfg, shape, ctx, mesh, train_cfg, kv_fsdp
+        )
+        t_compile = time.monotonic() - t0
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+                "output_bytes_per_device": int(ma.output_size_in_bytes),
+                "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+                "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+            }
+        except Exception:
+            mem = {}
+
+        # XLA cost analysis counts while-loop (scan) bodies ONCE, so the
+        # full-depth numbers under-count per-layer work. Extrapolate from
+        # 1- and 2-layer compiles: cost(L) = boundary + L*layer.
+        f1, b1, c1, _, _ = _compile_costs(
+            _with_layers(cfg, 1), shape, ctx, mesh, train_cfg, kv_fsdp
+        )
+        f2, b2, c2, _, _ = _compile_costs(
+            _with_layers(cfg, 2), shape, ctx, mesh, train_cfg, kv_fsdp
+        )
+        L = cfg.num_layers
+
+        def _extrap(v1, v2):
+            layer = max(v2 - v1, 0.0)
+            boundary = max(v1 - layer, 0.0)
+            return boundary + L * layer
+
+        flops_dev = _extrap(f1, f2)
+        bytes_dev = _extrap(b1, b2)
+        coll_dev = _extrap(c1.wire_bytes, c2.wire_bytes)
+
+        terms = roofline_terms(
+            hlo_flops=flops_dev,
+            hlo_bytes=bytes_dev,
+            collective_bytes=coll_dev,
+            chips=1,  # cost_analysis is per-device; rates are per-chip
+            cfg=cfg,
+            shape=shape,
+            mflops=model_flops(cfg, shape) / chips,
+        )
+        cell.update(
+            status="ok",
+            kind=bundle.kind,
+            chips=chips,
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll_dev,
+            raw_fullL={"flops": f_l, "bytes": b_l, "coll": coll_l.wire_bytes},
+            collective_breakdown=c2.bytes_by_op,
+            collective_counts=c2.count_by_op,
+            memory=mem,
+            compute_term_s=terms.compute_s,
+            memory_term_s=terms.memory_s,
+            collective_term_s=terms.collective_s,
+            dominant=terms.dominant,
+            model_flops_global=model_flops(cfg, shape),
+            useful_flop_ratio=terms.useful_flop_ratio,
+            mfu=terms.mfu,
+        )
+    except Exception as e:  # a failure here is a bug in our system
+        cell.update(
+            status="error",
+            error=f"{type(e).__name__}: {e}",
+            trace=traceback.format_exc()[-2000:],
+        )
+    if save:
+        _save(cell)
+    return cell
+
+
+def _save(cell: dict) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"__{cell['tag']}" if cell.get("tag") else ""
+    name = f"{cell['arch']}__{cell['shape']}__{cell['mesh']}{suffix}.json"
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(cell, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", action="append", default=[], choices=list(OPTS),
+                    help="enable a §Perf optimization (repeatable)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if args.multi_pod or args.all or args.multi_pod_only:
+        if not args.single_pod_only:
+            meshes.append(True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                suffix = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json"
+                )
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {arch} {shape} {mesh_name}")
+                    continue
+                cell = run_cell(arch, shape, multi_pod=mp, tag=args.tag,
+                                opts=set(args.opt))
+                status = cell["status"]
+                extra = (
+                    f"dom={cell.get('dominant')} mfu={cell.get('mfu', 0):.3f} "
+                    f"compile={cell.get('compile_s')}s"
+                    if status == "ok"
+                    else cell.get("reason", cell.get("error", ""))[:120]
+                )
+                print(f"[{status}] {arch} {shape} {mesh_name}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

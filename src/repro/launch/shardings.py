@@ -1,0 +1,233 @@
+"""Sharding rules: param/optimizer/batch/decode-state PartitionSpecs.
+
+Name-based rules over flattened pytree paths, parameterized by mesh
+axis sizes — a dimension is sharded only when divisible (GQA kv-heads
+smaller than the model axis stay replicated rather than padded; see
+DESIGN.md §6). ZeRO-1 adds the ``data`` axis to the first free dim of
+optimizer-state leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig
+from repro.launch.mesh import batch_axes_of
+
+__all__ = [
+    "param_spec",
+    "param_shardings",
+    "opt_shardings",
+    "batch_shardings",
+    "decode_state_shardings",
+    "tree_path_map",
+]
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _m(mesh: Mesh, n: int) -> Optional[str]:
+    """'model' if the dim divides the model axis, else replicate."""
+    return "model" if _div(n, mesh, "model") else None
+
+
+def tree_path_map(fn, tree: Any) -> Any:
+    """tree_map with a '/'-joined string path as the first argument."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append(fn(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _spec(off: int, *entries) -> P:
+    """P with ``off`` leading replicated dims (the stacked-layer axis)."""
+    return P(*((None,) * off + entries))
+
+
+def _replicate(shape) -> P:
+    return P(*(None,) * len(shape))
+
+
+def param_spec(
+    path: str, leaf, cfg: ArchConfig, mesh: Mesh, *, kv_fsdp: bool = False
+) -> P:
+    shape = leaf.shape
+    name = path.rsplit("/", 1)[-1]
+
+    if name == "embed":
+        # Vocab-sharded when divisible (NEZGT-balanced gather load);
+        # feature-sharded fallback for awkward vocab sizes (seamless).
+        if _div(shape[0], mesh, "model"):
+            return P("model", None)
+        return P(None, _m(mesh, shape[1]))
+    if name == "lm_head":
+        return P(None, _m(mesh, shape[1]))
+
+    in_layer = any(seg in path for seg in ("layers/", "enc_layers/", "dec_layers/"))
+    off = 1 if in_layer else 0  # stacked-layer leading dim
+
+    if "/attn/" in path or "/xattn/" in path:
+        if name in ("wq", "wk", "wv"):  # [.., D, H, hd]
+            # Head-sharded when heads divide the model axis. GQA kv
+            # projections with too few heads: baseline uses input-dim
+            # (row-parallel) sharding; the §Perf `kv_fsdp` optimization
+            # shards them over the DATA axis instead (weights gathered
+            # per use — MBs — rather than activations resharded — GBs).
+            h_spec = _m(mesh, shape[off + 1])
+            if h_spec is not None:
+                return _spec(off, None, h_spec, None)
+            if kv_fsdp and _div(shape[off], mesh, "data"):
+                return _spec(off, "data", None, None)
+            return _spec(off, _m(mesh, shape[off]), None, None)
+        if name == "wo":  # [.., H, hd, D]
+            h_spec = _m(mesh, shape[off])
+            if h_spec is not None:
+                return _spec(off, h_spec, None, None)
+            if kv_fsdp and _div(shape[off + 2], mesh, "data"):
+                return _spec(off, None, None, "data")
+            return _spec(off, None, None, _m(mesh, shape[off + 2]))
+        return _replicate(shape)
+
+    if "/moe/" in path:
+        if name == "router":
+            return _replicate(shape)
+        # stacked expert weights [L, E, ...] — experts on the model axis
+        return _spec(
+            off, _m(mesh, shape[off]), *(None,) * (len(shape) - off - 1)
+        )
+
+    if "/mlp/" in path:
+        if name in ("w_gate", "w_up"):  # [.., D, F]
+            return _spec(off, None, _m(mesh, shape[off + 1]))
+        if name == "w_down":  # [.., F, D]
+            return _spec(off, _m(mesh, shape[off]), None)
+        return _replicate(shape)
+
+    if "/ssm/" in path:
+        if name in ("w_z", "w_x", "w_dt"):  # [.., D, Din|H]
+            return _spec(off, None, _m(mesh, shape[off + 1]))
+        if name in ("w_b", "w_c"):
+            return _replicate(shape)
+        if name == "conv_w":  # [.., cw, Din]
+            return _spec(off, None, _m(mesh, shape[off + 1]))
+        if name in ("conv_b", "norm", "a_log", "d_skip", "dt_bias"):
+            return _spec(off, _m(mesh, shape[off]))
+        if name == "out_proj":  # [.., Din, D]
+            return _spec(off, _m(mesh, shape[off]), None)
+        return _replicate(shape)
+
+    return _replicate(shape)
+
+
+def param_shardings(
+    params: Any, cfg: ArchConfig, mesh: Mesh, *, kv_fsdp: bool = False
+) -> Any:
+    return tree_path_map(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, cfg, mesh, kv_fsdp=kv_fsdp)
+        ),
+        params,
+    )
+
+
+def opt_shardings(
+    opt_state: Any,
+    params_template: Any,
+    cfg: ArchConfig,
+    mesh: Mesh,
+    *,
+    zero1: bool = True,
+    kv_fsdp: bool = False,
+) -> Any:
+    """Optimizer-state shardings: mirror the param spec, then (ZeRO-1)
+    shard the first still-replicated dim over ``data`` when divisible."""
+
+    def spec_for(path: str, leaf) -> NamedSharding:
+        # mu/nu paths look like '0/<param path>' / '1/<param path>'.
+        parts = path.split("/", 1)
+        ppath = parts[1] if len(parts) > 1 else path
+        if ppath == "step" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        base = param_spec(ppath, leaf, cfg, mesh, kv_fsdp=kv_fsdp)
+        entries = list(base) + [None] * (leaf.ndim - len(base))
+        if zero1 and "data" in mesh.shape and "data" not in entries:
+            for i, e in enumerate(entries):
+                if e is None and leaf.shape[i] % mesh.shape["data"] == 0 and leaf.shape[i] >= mesh.shape["data"]:
+                    entries[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*entries))
+
+    return tree_path_map(spec_for, opt_state)
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    """Token batches shard over (pod, data) when divisible; a batch of 1
+    (long_500k) stays replicated — its KV/state shards over data/seq."""
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+
+    def spec_for(path: str, leaf) -> NamedSharding:
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] % nb == 0 and leaf.shape[0] >= nb:
+            return NamedSharding(mesh, P(baxes, *(None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    return tree_path_map(spec_for, batch)
+
+
+def decode_state_shardings(state: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Decode caches: batch-shard when possible; otherwise sequence-shard
+    KV over ``data`` (long-context) and head/channel-shard SSM state over
+    ``model`` — the paper's partial-Y reduction pattern (DESIGN.md §3)."""
+    baxes = batch_axes_of(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+
+    def spec_for(path: str, leaf) -> NamedSharding:
+        name = path.rsplit("/", 1)[-1]
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if name in ("kv_k", "kv_v"):
+            l, b, t, kv, hd = leaf.shape
+            bspec = baxes if (b % nb == 0 and b >= nb) else None
+            kvspec = _m(mesh, kv)
+            # Sequence-shard the cache when neither batch (long-context)
+            # nor kv-heads (GQA < model ranks) can take an axis — without
+            # this, a 60L×32k×GQA cache blows the 16 GB HBM budget
+            # (llava decode_32k; caught by the dry-run memory analysis).
+            if bspec is None and _div(t, mesh, "data"):
+                tspec = "data"
+            elif kvspec is None and _div(t, mesh, "model"):
+                tspec = "model"
+            else:
+                tspec = None
+            return NamedSharding(mesh, P(None, bspec, tspec, kvspec, None))
+        if name == "ssm":
+            l, b, h, pd, n = leaf.shape
+            bspec = baxes if (b % nb == 0 and b >= nb) else None
+            hspec = _m(mesh, h)
+            pspec = _m(mesh, pd) if hspec is None else None
+            return NamedSharding(mesh, P(None, bspec, hspec, pspec, None))
+        if name == "conv":
+            l, b, w, din = leaf.shape
+            bspec = baxes if (b % nb == 0 and b >= nb) else None
+            return NamedSharding(mesh, P(None, bspec, None, _m(mesh, din)))
+        if name == "mem":
+            b, t, d = leaf.shape
+            bspec = baxes if (b % nb == 0 and b >= nb) else None
+            tspec = "data" if (bspec is None and _div(t, mesh, "data")) else None
+            return NamedSharding(mesh, P(bspec, tspec, None))
+        # pos and misc
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    return tree_path_map(spec_for, state)

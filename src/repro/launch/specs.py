@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins for every model input (the dry-run's
+no-allocation batch), plus the per-cell step builders shared by
+dryrun.py, train.py and serve.py — one source of truth for what gets
+compiled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig, SHAPES, TrainConfig, get_arch
+from repro.models.api import Model, build
+from repro.models.moe import MeshCtx
+from repro.optim.adamw import init_opt
+from repro.train.step import make_train_step
+
+__all__ = ["input_specs", "abstract_params", "abstract_state", "StepBundle", "make_step_bundle"]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_length(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    if not cfg.frontend:
+        return 0
+    return cfg.frontend_len or max(shape.seq_len // 4, 8)
+
+
+def input_specs(
+    arch: str | ArchConfig, shape: str | ShapeConfig
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins for one (arch × shape) cell.
+
+    train/prefill: full token sequences; decode: the single new token per
+    slot (the KV/state cache is part of the step state, see
+    ``abstract_state``). Frontend archs get precomputed embedding specs.
+    """
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    b = sh.global_batch
+    if sh.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        batch = {"tokens": _sds((b, sh.seq_len), jnp.int32)}
+    if cfg.frontend:
+        fl = frontend_length(cfg, sh)
+        batch["frontend_embeds"] = _sds((b, fl, cfg.d_model), jnp.float32)
+    return batch
+
+
+def abstract_params(model: Model) -> Any:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_state(model: Model, cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    """Decode-cache stand-in (ShapeDtypeStructs, no allocation)."""
+    b = shape.global_batch
+    batch = {"tokens": _sds((b, shape.seq_len), jnp.int32)}
+    if cfg.frontend:
+        fl = frontend_length(cfg, shape)
+        batch["frontend_embeds"] = _sds((b, fl, cfg.d_model), jnp.float32)
+    params = abstract_params(model)
+    return jax.eval_shape(
+        lambda p, bt: model.init_state(p, bt, max_len=shape.seq_len), params, batch
+    )
+
+
+class StepBundle:
+    """Everything needed to lower one (arch × shape) cell."""
+
+    def __init__(self, step_fn, args: Tuple, kind: str):
+        self.step_fn = step_fn
+        self.args = args
+        self.kind = kind
+
+
+def make_step_bundle(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    ctx: Optional[MeshCtx] = None,
+    train_cfg: Optional[TrainConfig] = None,
+) -> StepBundle:
+    """Build the function + abstract args that the dry-run lowers.
+
+    train_*   -> full train step (fwd + bwd + AdamW)
+    prefill_* -> forward pass
+    decode_*  -> one serve_step over the KV/state cache
+    """
+    model = build(cfg)
+    train_cfg = train_cfg or TrainConfig(remat="dots")
+    params = abstract_params(model)
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step = make_train_step(model, train_cfg, ctx)
+        opt = jax.eval_shape(init_opt, params)
+        rng = jax.random.PRNGKey(0)
+        return StepBundle(step, (params, opt, batch, rng), "train")
+
+    if shape.kind == "prefill":
+
+        def prefill(params, batch):
+            logits, _ = model.forward(params, batch, ctx)
+            return logits
+
+        return StepBundle(prefill, (params, batch), "prefill")
+
+    # decode
+    state = abstract_state(model, cfg, shape)
+
+    def serve_step(params, tokens, state):
+        return model.decode_step(params, tokens, state, ctx)
+
+    return StepBundle(serve_step, (params, batch["tokens"], state), "decode")

@@ -1,0 +1,83 @@
+"""Mesh-aware training driver.
+
+Same step code the dry-run lowers, executed for real on whatever devices
+exist (tests/CI: host CPU devices via XLA_FLAGS; production: a TPU pod).
+Demonstrates the full path: mesh → sharded params/opt → pjit train loop
+with checkpointing and fault tolerance.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --reduced --data 4 --model 2 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig, get_arch
+from repro.data import DataConfig, SyntheticStream
+from repro.launch.mesh import batch_axes_of
+from repro.launch.shardings import batch_shardings, opt_shardings, param_shardings
+from repro.models import MeshCtx, build
+from repro.optim import init_opt
+from repro.runtime import make_mesh_any
+from repro.train import TrainLoop, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_mesh_any((args.data, args.model), ("data", "model"))
+    ctx = MeshCtx(mesh, batch_axes_of(mesh))
+    model = build(cfg)
+
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.device_put(params, param_shardings(params, cfg, mesh))
+    opt = init_opt(params)
+    opt = jax.device_put(opt, opt_shardings(opt, params, cfg, mesh))
+
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+                     learning_rate=3e-3, checkpoint_every=max(args.steps // 2, 1))
+    step = jax.jit(make_train_step(model, tc, ctx))
+
+    dc = DataConfig(cfg.vocab_size, seq_len=args.seq, global_batch=args.batch, seed=0)
+
+    def batch_fn(s: int):
+        return {"tokens": SyntheticStream(dc, start_step=s)._batch_at(s)}
+
+    def to_device(batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        return jax.device_put(b, batch_shardings(b, mesh))
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    loop = TrainLoop(step, batch_fn, tc,
+                     ckpt=CheckpointManager(args.ckpt_dir, keep=2),
+                     to_device=to_device)
+
+    # Keep opt state sharded: TrainLoop builds its own opt; run manually.
+    res = loop.run(params, num_steps=args.steps)
+    hist = res.metrics_history
+    print(f"mesh {dict(mesh.shape)} — loss {hist[0]['loss']:.4f} -> "
+          f"{hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

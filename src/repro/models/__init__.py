@@ -1,0 +1,4 @@
+from repro.models.api import Model, build
+from repro.models.moe import MeshCtx
+
+__all__ = ["Model", "build", "MeshCtx"]

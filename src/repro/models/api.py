@@ -1,0 +1,65 @@
+"""Unified model API: every architecture exposes the same four functions.
+
+``build(cfg)`` returns a :class:`Model` with:
+  * ``init(rng) -> params``
+  * ``forward(params, batch, ctx) -> (logits, aux)``   (train / prefill)
+  * ``init_state(params_or_none, batch, max_len) -> state``  (decode cache)
+  * ``decode_step(params, tokens, state, ctx) -> (logits, state)``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as lm_mod
+from repro.models.moe import MeshCtx
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    init_state: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+
+        def init(rng):
+            return encdec_mod.init_encdec(rng, cfg)
+
+        def forward(params, batch, ctx: Optional[MeshCtx] = None, remat="none"):
+            return encdec_mod.encdec_forward(params, batch, cfg, ctx, remat=remat)
+
+        def init_state(params, batch, max_len):
+            return encdec_mod.init_encdec_state(
+                params, batch["frontend_embeds"], cfg, max_len
+            )
+
+        def decode_step(params, tokens, state, ctx: Optional[MeshCtx] = None):
+            return encdec_mod.encdec_decode_step(params, tokens, state, cfg, ctx)
+
+        return Model(cfg, init, forward, init_state, decode_step)
+
+    def init(rng):
+        return lm_mod.init_lm(rng, cfg)
+
+    def forward(params, batch, ctx: Optional[MeshCtx] = None, remat="none"):
+        return lm_mod.lm_forward(params, batch, cfg, ctx, remat=remat)
+
+    def init_state(params, batch, max_len):
+        return lm_mod.init_decode_state(cfg, batch["tokens"].shape[0], max_len)
+
+    def decode_step(params, tokens, state, ctx: Optional[MeshCtx] = None):
+        return lm_mod.lm_decode_step(params, tokens, state, cfg, ctx)
+
+    return Model(cfg, init, forward, init_state, decode_step)

@@ -1,0 +1,233 @@
+"""GQA/MQA attention with qk-norm, sliding-window and decode paths.
+
+Kept GSPMD-friendly: head dims are explicit axes so the launcher's
+sharding rules can put heads on the ``model`` axis; decode attention
+contracts over a (possibly sequence-sharded) KV cache, letting GSPMD
+insert the partial-softmax collectives for the long-context shapes —
+the paper's column-variant partial-Y reduction (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.common import Params, dense_init, rms_norm, rope
+
+__all__ = ["AttnParams", "init_attn", "attention", "decode_attention", "KVCache"]
+
+NEG_INF = -1e30
+
+
+def init_attn(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), fan_in=d, dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), fan_in=d, dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), fan_in=d, dtype=dtype),
+        "wo": dense_init(ks[3], (h, hd, d), fan_in=h * hd, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(s: int, t: int, causal: bool, window: int, offset: int = 0) -> jax.Array:
+    rows = offset + jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    m = jnp.ones((s, t), jnp.bool_)
+    if causal:
+        m &= rows >= cols
+    if window > 0:
+        m &= rows - cols <= window
+    return m
+
+
+def _chunked_core(
+    q: jax.Array,  # [B, S, KV, G, hd]
+    k: jax.Array,  # [B, T, KV, hd]
+    v: jax.Array,  # [B, T, KV, hd]
+    *,
+    causal: bool,
+    window,  # python int or traced scalar; <=0 = full
+    chunk: int,
+    scale: float,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks — the XLA-level
+    flash attention: peak score memory O(S·chunk) instead of O(S·T).
+    Forward-only hot paths (prefill) use this; the Pallas kernel is the
+    TPU-native realization of the same schedule."""
+    b, s, kvh, g, hd = q.shape
+    t = k.shape[1]
+    t_real = t
+    if t % chunk:  # pad KV to a chunk multiple; padding masked out below
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+    kc = k.reshape(b, nc, chunk, kvh, hd)
+    vc = v.reshape(b, nc, chunk, kvh, hd)
+    rows = jnp.arange(s)[:, None]
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, kj, vj = inp
+        sc = jnp.einsum("bskgd,btkd->bkgst", q, kj).astype(jnp.float32) * scale
+        cols = j * chunk + jnp.arange(chunk)[None, :]
+        mask = cols < t_real  # KV padding is never attended
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= jnp.where(window > 0, rows - cols <= window, True)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p_ = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p_.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p_.astype(vj.dtype), vj
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.arange(nc), kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4)),
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    # [B,KV,G,S,hd] -> [B,S,KV,G,hd]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    b, s, _ = x.shape
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    groups = h // kv
+    q = q.reshape(b, s, kv, groups, cfg.hd)
+    if cfg.chunked_attn and s >= 2 * cfg.attn_chunk:
+        o = _chunked_core(
+            q, k, v, causal=causal, window=window if window > 0 else None,
+            chunk=cfg.attn_chunk, scale=1.0 / (cfg.hd**0.5),
+        ).reshape(b, s, h, cfg.hd)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (cfg.hd**0.5)
+    m = _mask(s, s, causal, window)
+    scores = jnp.where(m[None, None, None], scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, s, h, cfg.hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, T, KV, hd]
+    v: jax.Array  # [B, T, KV, hd]
+    length: jax.Array  # [] int32 — valid prefix length
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def kv_cache_len(cfg: ArchConfig, max_len: int) -> int:
+    """Uniform-SWA archs keep a ring buffer of window+1 slots — constant
+    decode memory, which is what makes long_500k feasible for them."""
+    if cfg.window > 0 and cfg.global_attn_every == 0:
+        return min(max_len, cfg.window + 1)
+    return max_len
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,  # [B, 1, D] — one new token
+    cache: KVCache,
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, KVCache]:
+    """One-token attention over a (possibly ring-buffered) KV cache.
+
+    Slot ``i`` of a T-slot cache holds absolute position
+    ``p_i = pos - ((pos - i) mod T)``; for a full cache (T > pos) this is
+    the identity for i ≤ pos and invalid otherwise, so the same masking
+    covers both the ring and the plain case.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    pos = cache.length
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    t = cache.k.shape[1]
+    w_idx = pos % t
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, w_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, w_idx, axis=1)
+
+    groups = h // kv
+    q = q.reshape(b, 1, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (hd**0.5)
+    cols = jnp.arange(t)[None, None, None, None, :]
+    p_col = pos - jnp.mod(pos - cols, t)  # absolute position per slot
+    valid = p_col >= 0
+    if window > 0:
+        valid &= pos - p_col <= window
+    scores = jnp.where(valid, scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, KVCache(k=k, v=v, length=pos + 1)
+
+
+def cross_attention(
+    p: Params,
+    x: jax.Array,  # [B, S, D] decoder states
+    mem: jax.Array,  # [B, T, D] encoder states
+    cfg: ArchConfig,
+) -> jax.Array:
+    b, s, _ = x.shape
+    t = mem.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", mem, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", mem, p["wv"])
+    groups = h // kv
+    q = q.reshape(b, s, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (hd**0.5)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])

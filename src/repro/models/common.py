@@ -1,0 +1,76 @@
+"""Shared model building blocks (pure JAX, params as pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Params",
+    "rms_norm",
+    "rope",
+    "dense_init",
+    "embed_init",
+    "cross_entropy",
+    "count_params",
+]
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope(
+    x: jax.Array,  # [..., S, H, hd]
+    positions: jax.Array,  # [..., S] int32
+    theta: float = 1e4,
+) -> jax.Array:
+    """Rotary position embedding on the last (head) dimension."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def cross_entropy(
+    logits: jax.Array,  # [B, S, V] (any float dtype)
+    labels: jax.Array,  # [B, S] int32
+    mask: jax.Array | None = None,  # [B, S] float
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def count_params(params: Params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

@@ -1,0 +1,174 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+The audio frontend is a stub: ``input_specs`` supplies precomputed frame
+embeddings [B, T_enc, D] (DESIGN.md §3). Encoder is bidirectional;
+decoder has causal self-attention + cross-attention. Decode keeps a
+self-attn KV cache plus the (static) encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.common import Params, dense_init, embed_init, rms_norm
+from repro.models.transformer import _dtype, init_mlp, mlp, padded_vocab
+
+__all__ = [
+    "init_encdec",
+    "encdec_forward",
+    "encode",
+    "encdec_decode_step",
+    "init_encdec_state",
+    "EncDecState",
+]
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn(ks[0], cfg, dtype),
+        "norm_x": jnp.ones((cfg.d_model,), dtype),
+        "xattn": attn_mod.init_attn(ks[1], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[2], cfg, dtype),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg)
+    k_e, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": embed_init(k_e, padded_vocab(cfg), cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: precomputed frontend embeddings [B, T, D]."""
+    x = frames.astype(_dtype(cfg))
+
+    def body(h, lp):
+        a = attn_mod.attention(
+            lp["attn"], rms_norm(h, lp["norm1"], cfg.norm_eps), cfg, causal=False
+        )
+        h = h + a
+        h = h + mlp(lp["mlp"], rms_norm(h, lp["norm2"], cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(
+        body, x, params["enc_layers"],
+        unroll=cfg.encoder_layers if cfg.scan_unroll else 1,
+    )
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    ctx=None,
+    *,
+    remat: str = "none",
+) -> Tuple[jax.Array, jax.Array]:
+    mem = encode(params, batch["frontend_embeds"], cfg)
+    x = params["embed"][batch["tokens"]]
+
+    def body(h, lp):
+        a = attn_mod.attention(
+            lp["attn"], rms_norm(h, lp["norm1"], cfg.norm_eps), cfg, causal=True
+        )
+        h = h + a
+        c = attn_mod.cross_attention(
+            lp["xattn"], rms_norm(h, lp["norm_x"], cfg.norm_eps), mem, cfg
+        )
+        h = h + c
+        h = h + mlp(lp["mlp"], rms_norm(h, lp["norm2"], cfg.norm_eps))
+        return h, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        body, x, params["dec_layers"],
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits[..., : cfg.vocab_size], jnp.zeros((), jnp.float32)
+
+
+class EncDecState(NamedTuple):
+    mem: jax.Array  # [B, T_enc, D] encoder output (static during decode)
+    kv_k: jax.Array  # [L, B, T, KV, hd]
+    kv_v: jax.Array
+    pos: jax.Array
+
+
+def init_encdec_state(
+    params: Params, frames: jax.Array, cfg: ArchConfig, max_len: int
+) -> EncDecState:
+    mem = encode(params, frames, cfg)
+    dtype = _dtype(cfg)
+    l, b = cfg.num_layers, frames.shape[0]
+    shape = (l, b, max_len, cfg.num_kv_heads, cfg.hd)
+    return EncDecState(
+        mem=mem,
+        kv_k=jnp.zeros(shape, dtype),
+        kv_v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def encdec_decode_step(
+    params: Params,
+    tokens: jax.Array,  # [B, 1]
+    state: EncDecState,
+    cfg: ArchConfig,
+    ctx=None,
+) -> Tuple[jax.Array, EncDecState]:
+    x = params["embed"][tokens]
+
+    def body(h, xs):
+        lp, kv_k, kv_v = xs
+        kvc = attn_mod.KVCache(k=kv_k, v=kv_v, length=state.pos)
+        a, kvc = attn_mod.decode_attention(
+            lp["attn"], rms_norm(h, lp["norm1"], cfg.norm_eps), kvc, cfg
+        )
+        h = h + a
+        c = attn_mod.cross_attention(
+            lp["xattn"], rms_norm(h, lp["norm_x"], cfg.norm_eps), state.mem, cfg
+        )
+        h = h + c
+        h = h + mlp(lp["mlp"], rms_norm(h, lp["norm2"], cfg.norm_eps))
+        return h, (kvc.k, kvc.v)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body,
+        x,
+        (params["dec_layers"], state.kv_k, state.kv_v),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[..., : cfg.vocab_size]
+    return logits[:, 0], EncDecState(
+        mem=state.mem, kv_k=new_k, kv_v=new_v, pos=state.pos + 1
+    )

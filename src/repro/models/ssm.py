@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD — state-space duality) layer, with chunked train scan and
+O(1) decode.
+
+Training uses the SSD block decomposition (Dao & Gu 2024): the sequence
+is split into chunks; intra-chunk terms are computed as masked
+attention-like matmuls (MXU-friendly), inter-chunk terms via a
+``lax.scan`` recurrence over per-chunk states. Heads shard over the
+``model`` axis; the scan carries only the [B, H, P, N] state.
+
+The technique of the paper does not apply to this layer (no sparse
+operand — DESIGN.md §Arch-applicability); the arch is implemented
+without it, as the assignment requires.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.common import Params, dense_init, rms_norm
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode_step", "SsmCache", "init_ssm_cache"]
+
+
+def init_ssm(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    """Input projections are kept *separate* (w_z/w_x/w_b/w_c/w_dt) rather
+    than fused, so each output dim shards cleanly on the model axis
+    (z/x over d_inner, dt over heads; B/C are tiny and replicated)."""
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, din), fan_in=d, dtype=dtype),
+        "w_x": dense_init(ks[1], (d, din), fan_in=d, dtype=dtype),
+        "w_b": dense_init(ks[2], (d, n), fan_in=d, dtype=dtype),
+        "w_c": dense_init(ks[3], (d, n), fan_in=d, dtype=dtype),
+        "w_dt": dense_init(ks[4], (d, h), fan_in=d, dtype=dtype),
+        "conv_w": dense_init(ks[5], (cw, din), fan_in=cw, dtype=dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[6], (din, d), fan_in=din, dtype=dtype),
+    }
+
+
+def _split_proj(p: Params, u: jax.Array, cfg: ArchConfig):
+    z = jnp.einsum("bsd,de->bse", u, p["w_z"])
+    x = jnp.einsum("bsd,de->bse", u, p["w_x"])
+    b_mat = jnp.einsum("bsd,dn->bsn", u, p["w_b"])
+    c_mat = jnp.einsum("bsd,dn->bsn", u, p["w_c"])
+    dt = jnp.einsum("bsd,dh->bsh", u, p["w_dt"])
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence axis. x [B,S,Din]."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(p: Params, u: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Chunked SSD over a full sequence. u: [B, S, D] -> [B, S, D]."""
+    bsz, s, _ = u.shape
+    h, pdim, n, cl = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    assert s % cl == 0, (s, cl)
+    nc = s // cl
+
+    z, x, b_mat, c_mat, dt_raw = _split_proj(p, u, cfg)
+    x = _causal_conv(x, p["conv_w"], p["conv_b"])
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+    loga = dt * a  # [B,S,H] log decay per step (<=0)
+
+    xh = x.reshape(bsz, nc, cl, h, pdim).astype(jnp.float32)
+    bm = b_mat.reshape(bsz, nc, cl, n).astype(jnp.float32)
+    cm = c_mat.reshape(bsz, nc, cl, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, cl, h)
+    lg = loga.reshape(bsz, nc, cl, h)
+    lcum = jnp.cumsum(lg, axis=2)  # [B,nc,cl,H] inclusive cumulative log-decay
+
+    # --- Intra-chunk (masked attention-like) ------------------------------
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)  # [B,nc,cl,cl]
+    # decay exp(L_i - L_j) for i >= j (segment sum), per head.
+    dec = jnp.exp(
+        jnp.clip(lcum[:, :, :, None, :] - lcum[:, :, None, :, :], -60.0, 0.0)
+    )  # [B,nc,i,j,H]
+    causal = jnp.tril(jnp.ones((cl, cl), jnp.float32))
+    g = cb[..., None] * dec * causal[None, None, :, :, None]  # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", g, dtc, xh)
+
+    # --- Chunk states + inter-chunk recurrence ---------------------------
+    last = lcum[:, :, -1:, :]  # [B,nc,1,H]
+    decay_to_end = jnp.exp(jnp.clip(last - lcum, -60.0, 0.0))  # [B,nc,cl,H]
+    states = jnp.einsum(
+        "bclh,bclh,bclhp,bcln->bchpn", decay_to_end, dtc, xh, bm
+    )  # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(jnp.clip(last[:, :, 0, :], -60.0, 0.0))  # [B,nc,H]
+
+    def scan_fn(h_prev, inp):
+        st, dk = inp  # [B,H,P,N], [B,H]
+        h_new = h_prev * dk[:, :, None, None] + st
+        return h_new, h_prev  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering chunk
+
+    decay_in = jnp.exp(jnp.clip(lcum, -60.0, 0.0))  # [B,nc,cl,H]
+    y_inter = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp", cm, h_in, decay_in
+    )
+
+    y = y_intra + y_inter + p["d_skip"][None, None, None, :, None] * xh
+    y = y.reshape(bsz, s, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array  # [B, cw-1, Din] trailing conv inputs
+    state: jax.Array  # [B, H, P, N]
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> SsmCache:
+    return SsmCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    )
+
+
+def ssm_decode_step(
+    p: Params, u: jax.Array, cache: SsmCache, cfg: ArchConfig
+) -> Tuple[jax.Array, SsmCache]:
+    """One-token SSD update. u: [B, 1, D]."""
+    bsz = u.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, x, b_mat, c_mat, dt_raw = _split_proj(p, u, cfg)
+
+    # Causal conv over (cached window + new token).
+    win = jnp.concatenate([cache.conv, x], axis=1)  # [B, cw, Din]
+    conv_out = jnp.einsum("bwd,wd->bd", win, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)  # [B, Din]
+    new_conv = win[:, 1:]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)  # [B,H]
+    xh = xc.reshape(bsz, h, pdim).astype(jnp.float32)
+    bv = b_mat[:, 0].astype(jnp.float32)  # [B,N]
+    cv = c_mat[:, 0].astype(jnp.float32)
+    state = cache.state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bv
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cv) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, SsmCache(conv=new_conv, state=state)

@@ -1,0 +1,388 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid families.
+
+One generic residual block is scanned over stacked layer params
+(`jax.lax.scan`) so the HLO is O(1) in depth — essential for the
+512-device dry-run compiles. Per-layer booleans (e.g. hybrid global-
+attention layers) ride along as scan xs.
+
+Families:
+  dense  : attn + SwiGLU MLP
+  moe    : attn + expert-parallel MoE FFN (repro.models.moe)
+  ssm    : Mamba-2 SSD block only
+  hybrid : parallel attn(SWA) ‖ SSD heads + MLP (Hymba-style)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import Params, dense_init, embed_init, rms_norm
+
+__all__ = ["init_lm", "lm_forward", "lm_decode_step", "init_decode_state", "DecodeState"]
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Embedding rows, optionally padded to a TP-divisible multiple
+    (vocab_pad_to) so awkward vocab sizes still shard (§Perf opt)."""
+    v = cfg.vocab_size
+    if cfg.vocab_pad_to > 1:
+        v = -(-v // cfg.vocab_pad_to) * cfg.vocab_pad_to
+    return v
+
+
+def init_mlp(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), fan_in=d, dtype=dtype),
+        "w_up": dense_init(ks[1], (d, f), fan_in=d, dtype=dtype),
+        "w_down": dense_init(ks[2], (f, d), fan_in=f, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h * u, p["w_down"])
+
+
+def _init_layer(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family != "ssm":
+        p["attn"] = attn_mod.init_attn(ks[0], cfg, dtype)
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+    elif cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+        p["beta_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["beta_ssm"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = init_mlp(ks[2], cfg, dtype)
+    elif cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg, dtype)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params: Params = {
+        "embed": embed_init(k_embed, padded_vocab(cfg), cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), fan_in=cfg.d_model, dtype=dtype
+        )
+    return params
+
+
+def _layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer window size (0 = full attention)."""
+    w = jnp.full((cfg.num_layers,), cfg.window, jnp.int32)
+    if cfg.global_attn_every > 0 and cfg.window > 0:
+        idx = jnp.arange(cfg.num_layers)
+        w = jnp.where(idx % cfg.global_attn_every == 0, 0, w)
+    return w
+
+
+def _anchor(x: jax.Array, cfg: ArchConfig, ctx: moe_mod.MeshCtx) -> jax.Array:
+    """§Perf `act_anchor`: pin the residual stream to batch-sharded /
+    model-replicated layout so GSPMD never wanders into involuntary
+    resharding of [B,S,D] activations between layers."""
+    if not cfg.act_anchor or ctx is None or ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = P(ctx.batch_axes, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def _block(
+    x: jax.Array,
+    lp: Params,
+    is_global: jax.Array,
+    cfg: ArchConfig,
+    ctx: moe_mod.MeshCtx,
+) -> Tuple[jax.Array, jax.Array]:
+    """One residual block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = _anchor(x, cfg, ctx)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        return x + ssm_mod.ssm_forward(lp["ssm"], h, cfg), aux
+
+    if cfg.family == "hybrid":
+        # SWA unless this layer is global; jnp.where on two masked results
+        # would double compute, so select the window scalar instead: the
+        # mask builder treats window<=0 as full attention.
+        win = jnp.where(is_global, 0, cfg.window)
+        a_out = _attention_dynwin(lp["attn"], h, cfg, win)
+        s_out = ssm_mod.ssm_forward(lp["ssm"], h, cfg)
+        mix = 0.5 * (
+            rms_norm(a_out, lp["beta_attn"], cfg.norm_eps)
+            + rms_norm(s_out, lp["beta_ssm"], cfg.norm_eps)
+        )
+        x = x + mix
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2), aux
+
+    a_out = attn_mod.attention(lp["attn"], h, cfg, causal=True, window=cfg.window)
+    x = x + a_out
+    h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_ffn(lp["moe"], h2, cfg, ctx)
+    else:
+        y = mlp(lp["mlp"], h2)
+    return x + y, aux
+
+
+def _attention_dynwin(p, x, cfg, win):
+    """Attention whose window is a traced scalar (0 = full)."""
+    b, s, _ = x.shape
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = attn_mod._qkv(p, x, cfg, positions)
+    groups = h // kv
+    q = q.reshape(b, s, kv, groups, cfg.hd)
+    if cfg.chunked_attn and s >= 2 * cfg.attn_chunk:
+        # win is a traced scalar: the chunked core masks elementwise, so
+        # a window of 0 (global layer) degrades to plain causal.
+        o = attn_mod._chunked_core(
+            q, k, v, causal=True, window=win, chunk=cfg.attn_chunk,
+            scale=1.0 / (cfg.hd**0.5),
+        ).reshape(b, s, h, cfg.hd)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (cfg.hd**0.5)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    m = rows >= cols
+    m &= jnp.where(win > 0, rows - cols <= win, True)
+    scores = jnp.where(m[None, None, None], scores.astype(jnp.float32), attn_mod.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, s, h, cfg.hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Token embeddings, with optional frontend-stub embeddings prepended
+    (VLM patches / audio frames arrive precomputed — DESIGN.md §3)."""
+    x = params["embed"][batch["tokens"]]
+    n_front = 0
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+        n_front = fe.shape[1]
+    return x, n_front
+
+
+def lm_forward(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    ctx: Optional[moe_mod.MeshCtx] = None,
+    *,
+    remat: str = "none",
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [B,S,V], aux_loss)."""
+    ctx = ctx or moe_mod.MeshCtx()
+    x, n_front = _embed_inputs(params, batch, cfg)
+    is_global = _layer_windows(cfg) == 0
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, glob = xs
+        h, a = _block(h, lp, glob, cfg, ctx)
+        return (h, aux + a), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+
+    (x, aux), _ = jax.lax.scan(
+        body,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], is_global),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:]
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits[..., : cfg.vocab_size], aux
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer caches ([L, ...] leading axis) + shared position."""
+
+    kv_k: Optional[jax.Array]  # [L, B, T, KV, hd]
+    kv_v: Optional[jax.Array]
+    conv: Optional[jax.Array]  # [L, B, cw-1, Din]
+    ssm: Optional[jax.Array]  # [L, B, H, P, N]
+    pos: jax.Array  # [] int32
+
+
+def init_decode_state(
+    cfg: ArchConfig, batch: int, max_len: int
+) -> DecodeState:
+    dtype = _dtype(cfg)
+    l = cfg.num_layers
+    kv_k = kv_v = conv = ssm_st = None
+    if cfg.family != "ssm":
+        t = attn_mod.kv_cache_len(cfg, max_len)
+        shape = (l, batch, t, cfg.num_kv_heads, cfg.hd)
+        kv_k = jnp.zeros(shape, dtype)
+        kv_v = jnp.zeros(shape, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        conv = jnp.zeros((l, batch, cfg.conv_width - 1, cfg.d_inner), dtype)
+        ssm_st = jnp.zeros(
+            (l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return DecodeState(kv_k, kv_v, conv, ssm_st, jnp.zeros((), jnp.int32))
+
+
+def _decode_block(
+    x: jax.Array,
+    lp: Params,
+    cache: Dict[str, Any],
+    is_global: jax.Array,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    ctx: moe_mod.MeshCtx,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    new_cache = dict(cache)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        sc = ssm_mod.SsmCache(conv=cache["conv"], state=cache["ssm"])
+        out, sc = ssm_mod.ssm_decode_step(lp["ssm"], h, sc, cfg)
+        new_cache.update(conv=sc.conv, ssm=sc.state)
+        return x + out, new_cache
+
+    kvc = attn_mod.KVCache(k=cache["kv_k"], v=cache["kv_v"], length=pos)
+    if cfg.family == "hybrid":
+        win = jnp.where(is_global, 0, cfg.window)
+        a_out, kvc = _decode_attention_dynwin(lp["attn"], h, kvc, cfg, win)
+        sc = ssm_mod.SsmCache(conv=cache["conv"], state=cache["ssm"])
+        s_out, sc = ssm_mod.ssm_decode_step(lp["ssm"], h, sc, cfg)
+        mix = 0.5 * (
+            rms_norm(a_out, lp["beta_attn"], cfg.norm_eps)
+            + rms_norm(s_out, lp["beta_ssm"], cfg.norm_eps)
+        )
+        x = x + mix
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2)
+        new_cache.update(kv_k=kvc.k, kv_v=kvc.v, conv=sc.conv, ssm=sc.state)
+        return x, new_cache
+
+    a_out, kvc = attn_mod.decode_attention(lp["attn"], h, kvc, cfg, window=cfg.window)
+    x = x + a_out
+    h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_mod.moe_ffn(lp["moe"], h2, cfg, ctx)
+    else:
+        y = mlp(lp["mlp"], h2)
+    new_cache.update(kv_k=kvc.k, kv_v=kvc.v)
+    return x + y, new_cache
+
+
+def _decode_attention_dynwin(p, x, cache, cfg, win):
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    pos = cache.length
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k_new, v_new = attn_mod._qkv(p, x, cfg, positions)
+    t = cache.k.shape[1]
+    w_idx = pos % t
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, w_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, w_idx, axis=1)
+    groups = h // kv
+    q = q.reshape(b, 1, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (hd**0.5)
+    cols = jnp.arange(t)[None, None, None, None, :]
+    p_col = pos - jnp.mod(pos - cols, t)
+    valid = p_col >= 0
+    valid &= jnp.where(win > 0, pos - p_col <= win, True)
+    scores = jnp.where(valid, scores.astype(jnp.float32), attn_mod.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, attn_mod.KVCache(k=k, v=v, length=pos + 1)
+
+
+def lm_decode_step(
+    params: Params,
+    tokens: jax.Array,  # [B, 1] int32
+    state: DecodeState,
+    cfg: ArchConfig,
+    ctx: Optional[moe_mod.MeshCtx] = None,
+) -> Tuple[jax.Array, DecodeState]:
+    """One decode step: returns (logits [B, V], new state)."""
+    ctx = ctx or moe_mod.MeshCtx()
+    x = params["embed"][tokens]
+    is_global = _layer_windows(cfg) == 0
+
+    cache_xs = {}
+    if state.kv_k is not None:
+        cache_xs["kv_k"] = state.kv_k
+        cache_xs["kv_v"] = state.kv_v
+    if state.ssm is not None:
+        cache_xs["conv"] = state.conv
+        cache_xs["ssm"] = state.ssm
+
+    def body(carry, xs):
+        h = carry
+        lp, cache, glob = xs
+        h, new_cache = _decode_block(h, lp, cache, glob, state.pos, cfg, ctx)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(
+        body,
+        x,
+        (params["layers"], cache_xs, is_global),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = logits[..., : cfg.vocab_size]
+    new_state = DecodeState(
+        kv_k=new_caches.get("kv_k"),
+        kv_v=new_caches.get("kv_v"),
+        conv=new_caches.get("conv"),
+        ssm=new_caches.get("ssm"),
+        pos=state.pos + 1,
+    )
+    return logits[:, 0], new_state

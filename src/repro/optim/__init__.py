@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptState, init_opt, opt_update, cosine_lr, global_norm, compress_int8
+__all__ = ["OptState", "init_opt", "opt_update", "cosine_lr", "global_norm", "compress_int8"]

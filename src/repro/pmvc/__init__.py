@@ -1,0 +1,7 @@
+from repro.pmvc.plan_device import DevicePlan, SelectivePlan, pack_units, build_selective_plan
+from repro.pmvc.dist import pmvc_simulate, make_pmvc_step, make_unit_mesh, phase_costs, pad_x
+
+__all__ = [
+    "DevicePlan", "SelectivePlan", "pack_units", "build_selective_plan",
+    "pmvc_simulate", "make_pmvc_step", "make_unit_mesh", "phase_costs", "pad_x",
+]

@@ -1,0 +1,219 @@
+"""Device-side packing of a two-level plan (host → stacked unit arrays).
+
+Takes the element-level (node, core) assignment from
+:class:`repro.core.combined.TwoLevelPlan` and emits equal-shaped stacked
+BELL arrays, one leading ``unit`` axis entry per compute unit — the form
+both the vmap simulator and the shard_map executor consume. Padding to
+the global max tile count per unit realizes the paper's load imbalance
+as wasted FLOPs (DESIGN.md §5.3).
+
+Also builds the **selective-exchange plan** (DESIGN.md §2.2): with x
+sharded by block-column over units, a static all_to_all send/receive
+schedule moves only the x blocks each unit actually needs — the paper's
+``C_Xk`` fan-out volume realized on a TPU mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.sparse.formats import COO
+
+__all__ = ["DevicePlan", "SelectivePlan", "pack_units", "build_selective_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlan:
+    """Stacked per-unit BELL arrays (leading axis = unit)."""
+
+    shape: Tuple[int, int]
+    bm: int
+    bn: int
+    num_units: int
+    tiles: np.ndarray  # [U, T, bm, bn] f32
+    tile_row: np.ndarray  # [U, T] int32 — GLOBAL block-row
+    tile_col: np.ndarray  # [U, T] int32 — global block-col
+    real_tiles: np.ndarray  # [U] tiles before padding
+
+    @property
+    def t(self) -> int:
+        return int(self.tiles.shape[1])
+
+    @property
+    def num_row_blocks(self) -> int:
+        return -(-self.shape[0] // self.bm)
+
+    @property
+    def num_col_blocks(self) -> int:
+        return -(-self.shape[1] // self.bn)
+
+    @property
+    def lb_tiles(self) -> float:
+        avg = self.real_tiles.mean()
+        return float(self.real_tiles.max() / avg) if avg > 0 else 1.0
+
+    @property
+    def padding_flop_waste(self) -> float:
+        tot = self.num_units * self.t
+        real = int(self.real_tiles.sum())
+        return 1.0 - real / tot if tot else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectivePlan:
+    """Static all_to_all schedule for the selective x fan-out.
+
+    ``x`` lives block-column-sharded: unit ``u`` owns global block-cols
+    ``owned[u]`` (padded with -1). ``send_idx[u, v, l]`` is the l-th
+    *local* block index that u sends to v (-1 = padding). After the
+    all_to_all, unit u holds, for each source v, the blocks it asked for;
+    ``recv_slot[u]`` maps each of u's needed global block-cols to its
+    (source, lane) position; the executor scatters them into a compact
+    local x workspace indexed by ``tile_col_local``.
+    """
+
+    num_units: int
+    blocks_per_unit: int  # owned block-cols per unit (padded)
+    lanes: int  # L = max blocks on any (src,dst) route
+    owned: np.ndarray  # [U, blocks_per_unit] global block-col or -1
+    send_idx: np.ndarray  # [U, U, L] local idx into owned, or -1
+    recv_src: np.ndarray  # [U, W] source unit per needed block
+    recv_lane: np.ndarray  # [U, W] lane per needed block
+    needed: np.ndarray  # [U, W] global block-col ids (-1 pad)
+    tile_col_local: np.ndarray  # [U, T] per-tile index into the workspace
+    wire_blocks: int  # realized blocks on the wire (sum over routes)
+    naive_blocks: int  # all-gather equivalent volume
+
+    @property
+    def workspace(self) -> int:
+        return int(self.needed.shape[1])
+
+    @property
+    def volume_ratio(self) -> float:
+        """Realized / all-gather fan-out volume (<1 == paper's FR_X win)."""
+        return self.wire_blocks / max(self.naive_blocks, 1)
+
+
+def pack_units(
+    a: COO,
+    elem_unit: np.ndarray,
+    num_units: int,
+    bm: int,
+    bn: int,
+) -> DevicePlan:
+    """Stack every unit's non-empty tiles, padded to the global max."""
+    nrb = -(-a.shape[0] // bm)
+    ncb = -(-a.shape[1] // bn)
+    rb = (a.row // bm).astype(np.int64)
+    cb = (a.col // bn).astype(np.int64)
+    # Tile key includes the owning unit: same (rb,cb) tile may exist on
+    # two units when the element partition splits a tile (cost recorded
+    # by the benchmark as tile duplication).
+    key = (elem_unit.astype(np.int64) * nrb + rb) * ncb + cb
+    uniq, tile_of_elem = np.unique(key, return_inverse=True)
+    num_tiles = uniq.shape[0]
+    all_tiles = np.zeros((num_tiles, bm, bn), dtype=np.float32)
+    all_tiles[tile_of_elem, a.row % bm, a.col % bn] = a.val.astype(np.float32)
+    t_unit = (uniq // (nrb * ncb)).astype(np.int64)
+    t_rb = ((uniq // ncb) % nrb).astype(np.int32)
+    t_cb = (uniq % ncb).astype(np.int32)
+
+    counts = np.bincount(t_unit, minlength=num_units)
+    t_max = max(int(counts.max(initial=0)), 1)
+    tiles = np.zeros((num_units, t_max, bm, bn), dtype=np.float32)
+    tile_row = np.zeros((num_units, t_max), dtype=np.int32)
+    tile_col = np.zeros((num_units, t_max), dtype=np.int32)
+    for u in range(num_units):
+        sel = np.nonzero(t_unit == u)[0]
+        srt = np.argsort(t_rb[sel], kind="stable")
+        sel = sel[srt]
+        k = sel.shape[0]
+        tiles[u, :k] = all_tiles[sel]
+        tile_row[u, :k] = t_rb[sel]
+        tile_col[u, :k] = t_cb[sel]
+    return DevicePlan(
+        shape=a.shape,
+        bm=bm,
+        bn=bn,
+        num_units=num_units,
+        tiles=tiles,
+        tile_row=tile_row,
+        tile_col=tile_col,
+        real_tiles=counts.astype(np.int64),
+    )
+
+
+def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
+    """Derive the static all_to_all schedule from the tile structure."""
+    u_n = plan.num_units
+    ncb = plan.num_col_blocks
+    # x ownership: contiguous block-col ranges (matches how an iterative
+    # solver leaves y sharded by rows == next x sharded by the same map).
+    per = -(-ncb // u_n)
+    owned = np.full((u_n, per), -1, dtype=np.int32)
+    for u in range(u_n):
+        lo, hi = u * per, min((u + 1) * per, ncb)
+        owned[u, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+    owner_of_block = np.zeros(ncb, dtype=np.int32)
+    local_of_block = np.zeros(ncb, dtype=np.int32)
+    for u in range(u_n):
+        for l, g in enumerate(owned[u]):
+            if g >= 0:
+                owner_of_block[g] = u
+                local_of_block[g] = l
+
+    # Needed block-cols per unit (C_Xk at tile granularity).
+    needed_sets = []
+    for u in range(u_n):
+        k = int(plan.real_tiles[u])
+        needed_sets.append(np.unique(plan.tile_col[u, :k]))
+    w_max = max(max((s.shape[0] for s in needed_sets), default=1), 1)
+
+    # Routes: blocks unit v must send to unit u.
+    route: list[list[list[int]]] = [[[] for _ in range(u_n)] for _ in range(u_n)]
+    for u in range(u_n):
+        for g in needed_sets[u]:
+            route[owner_of_block[g]][u].append(int(g))
+    lanes = max(max(len(route[v][u]) for v in range(u_n) for u in range(u_n)), 1)
+
+    send_idx = np.full((u_n, u_n, lanes), -1, dtype=np.int32)
+    for v in range(u_n):
+        for u in range(u_n):
+            for l, g in enumerate(route[v][u]):
+                send_idx[v, u, l] = local_of_block[g]
+
+    recv_src = np.zeros((u_n, w_max), dtype=np.int32)
+    recv_lane = np.zeros((u_n, w_max), dtype=np.int32)
+    needed = np.full((u_n, w_max), -1, dtype=np.int32)
+    for u in range(u_n):
+        for i, g in enumerate(needed_sets[u]):
+            v = owner_of_block[g]
+            lane = route[v][u].index(int(g))
+            recv_src[u, i] = v
+            recv_lane[u, i] = lane
+            needed[u, i] = g
+
+    # Per-tile index into the compact workspace.
+    tile_col_local = np.zeros_like(plan.tile_col)
+    for u in range(u_n):
+        lut = np.zeros(ncb, dtype=np.int32)
+        lut[needed_sets[u]] = np.arange(needed_sets[u].shape[0], dtype=np.int32)
+        tile_col_local[u] = lut[plan.tile_col[u]]
+
+    wire = int(sum(len(route[v][u]) for v in range(u_n) for u in range(u_n) if v != u))
+    naive = (u_n - 1) * ncb  # all-gather: every unit receives all remote blocks
+    return SelectivePlan(
+        num_units=u_n,
+        blocks_per_unit=per,
+        lanes=lanes,
+        owned=owned,
+        send_idx=send_idx,
+        recv_src=recv_src,
+        recv_lane=recv_lane,
+        needed=needed,
+        tile_col_local=tile_col_local,
+        wire_blocks=wire,
+        naive_blocks=naive,
+    )

@@ -1,0 +1,16 @@
+"""TPU v5e hardware constants (the TARGET; the container only compiles)."""
+from __future__ import annotations
+
+__all__ = ["PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW", "CHIP"]
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per ICI link (~, per direction)
+
+CHIP = {
+    "peak_flops_bf16": PEAK_FLOPS_BF16,
+    "hbm_bw": HBM_BW,
+    "ici_bw": ICI_BW,
+    "vmem_bytes": 128 * 2**20 // 8,  # ~16 MiB usable
+    "hbm_bytes": 16 * 2**30,
+}

@@ -1,0 +1,4 @@
+from repro.runtime.fault import FaultInjector, WorkerFailure, Heartbeat, StragglerMonitor
+from repro.runtime.elastic import make_mesh_any, reshard_tree, elastic_restart
+__all__ = ["FaultInjector", "WorkerFailure", "Heartbeat", "StragglerMonitor",
+           "make_mesh_any", "reshard_tree", "elastic_restart"]

@@ -1,0 +1,50 @@
+"""Elastic re-scaling: resume the same logical state on a different mesh.
+
+Checkpoints are mesh-agnostic (logical layout — repro.checkpoint), and
+the data stream is a pure function of (step, global row), so scaling
+from f to f' nodes is: checkpoint → rebuild mesh/shardings → restore →
+continue. This mirrors the paper's node-scaling study (f ∈ {2..64}) as a
+*runtime* capability instead of separate experiments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["make_mesh_any", "reshard_tree", "elastic_restart"]
+
+
+def make_mesh_any(
+    shape: Tuple[int, ...], axes: Tuple[str, ...]
+) -> Mesh:
+    """Mesh over however many local devices exist (dry-run meshes use the
+    512-device XLA flag; tests use 8; smoke uses 1)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def reshard_tree(tree: Any, mesh: Mesh, spec_fn: Callable[[str, Any], P]) -> Any:
+    """Place every leaf on ``mesh`` with the sharding rule ``spec_fn``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        sharding = NamedSharding(mesh, spec_fn(key, leaf))
+        out.append(jax.device_put(leaf, sharding))
+    return jax.tree_util.tree_unflatten(treedef, [o for o in out])
+
+
+def elastic_restart(
+    ckpt_manager,
+    template: Any,
+    new_mesh: Mesh,
+    spec_fn: Callable[[str, Any], P],
+    step: Optional[int] = None,
+) -> Tuple[Any, int]:
+    """Restore the latest checkpoint onto a mesh of a different size."""
+    state, ck_step = ckpt_manager.restore(template, step)
+    return reshard_tree(state, new_mesh, spec_fn), ck_step

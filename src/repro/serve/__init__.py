@@ -1,0 +1,2 @@
+from repro.serve.engine import Request, ServeEngine, greedy_generate
+__all__ = ["Request", "ServeEngine", "greedy_generate"]

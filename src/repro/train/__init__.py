@@ -1,0 +1,3 @@
+from repro.train.step import make_train_step, loss_fn
+from repro.train.loop import TrainLoop, TrainResult
+__all__ = ["make_train_step", "loss_fn", "TrainLoop", "TrainResult"]

@@ -1,0 +1,75 @@
+"""Checkpoint manager: roundtrip, atomicity, retention, async writes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, flatten_tree, unflatten_tree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+        "tuple": (jnp.ones((3,)), jnp.zeros((2, 2), jnp.bfloat16)),
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(5, tree)
+    restored, step = mgr.restore(jax.tree.map(lambda x: x, tree))
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    mgr.save(7, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    restored, _ = mgr.restore(tree)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(restored["a"]))
+
+
+def test_tmp_dirs_never_committed(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree())
+    # A stale tmp dir (e.g. crash mid-write) must be invisible.
+    os.makedirs(str(tmp_path / "step_000000099.tmp"))
+    assert mgr.all_steps() == [1]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((4, 4))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.ones((8, 8))})
+
+
+def test_missing_key_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((4,))})
+    with pytest.raises(KeyError):
+        mgr.restore({"w": jnp.ones((4,)), "extra": jnp.ones((2,))})
+
+
+def test_flatten_unflatten_inverse():
+    tree = _tree(3)
+    flat = flatten_tree(tree)
+    back = unflatten_tree(tree, flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))

@@ -1,0 +1,84 @@
+"""Two-level combined method: the four paper combinations + comm model."""
+import numpy as np
+import pytest
+
+from repro.core.combined import PAPER_COMBOS, two_level_partition
+from repro.sparse.generate import PAPER_SUITE, generate, random_coo
+
+
+@pytest.mark.parametrize("combo", list(PAPER_COMBOS))
+def test_every_element_owned_once(combo):
+    a = random_coo(120, 1400, seed=8)
+    plan = two_level_partition(a, f=4, c=4, combo=combo)
+    assert plan.elem_node.shape == (a.nnz,)
+    assert plan.elem_core.shape == (a.nnz,)
+    assert plan.elem_node.min() >= 0 and plan.elem_node.max() < 4
+    assert plan.elem_core.min() >= 0 and plan.elem_core.max() < 4
+    assert int(plan.node_stats.nnz.sum()) == a.nnz
+    assert int(plan.core_stats.nnz.sum()) == a.nnz
+
+
+def test_comm_stats_match_bruteforce():
+    a = random_coo(80, 700, seed=9)
+    plan = two_level_partition(a, f=3, c=2, combo="NL-HC")
+    for k in range(3):
+        sel = plan.elem_node == k
+        assert plan.node_stats.nnz[k] == sel.sum()
+        assert plan.node_stats.c_x[k] == len(np.unique(a.col[sel]))
+        assert plan.node_stats.c_y[k] == len(np.unique(a.row[sel]))
+    # paper bounds: 1 <= C_Xk <= N ; DR_k = NZ_k + C_Xk
+    assert (plan.node_stats.c_x >= 1).all()
+    assert (plan.node_stats.c_x <= a.shape[1]).all()
+    np.testing.assert_array_equal(
+        plan.node_stats.reception, plan.node_stats.nnz + plan.node_stats.c_x
+    )
+
+
+def test_row_inter_preserves_row_integrity():
+    """NL-* assigns whole rows to nodes: every row's elements live on one
+    node (the property that makes the fan-in a pure concat)."""
+    a = random_coo(100, 900, seed=10)
+    plan = two_level_partition(a, f=4, c=2, combo="NL-HL")
+    for r in np.unique(a.row):
+        owners = np.unique(plan.elem_node[a.row == r])
+        assert owners.shape[0] == 1
+
+
+def test_col_inter_preserves_col_integrity():
+    a = random_coo(100, 900, seed=11)
+    plan = two_level_partition(a, f=4, c=2, combo="NC-HC")
+    for cidx in np.unique(a.col):
+        owners = np.unique(plan.elem_node[a.col == cidx])
+        assert owners.shape[0] == 1
+
+
+def test_paper_c3_row_inter_scatter_volume():
+    """C3: NL-* inter-node decomposition yields no larger total fan-in
+    (gather) volume than NC-* — rows stay whole so partial-Y vectors
+    don't overlap (thesis §4.2, 'Collecte des résultats')."""
+    wins = 0
+    cases = 0
+    for name in ("thermal", "t2dal", "epb1"):
+        a = generate(PAPER_SUITE[name])
+        for f in (4, 8):
+            nl = two_level_partition(a, f, 4, "NL-HL")
+            nc = two_level_partition(a, f, 4, "NC-HC")
+            cases += 1
+            if nl.gather_volume <= nc.gather_volume:
+                wins += 1
+    assert wins >= cases * 0.7, (wins, cases)
+
+
+def test_lb_close_to_one_on_paper_suite():
+    a = generate(PAPER_SUITE["thermal"])
+    plan = two_level_partition(a, f=8, c=4, combo="NL-HL")
+    assert plan.lb_nodes < 1.6
+    assert plan.lb_cores < 2.5
+
+
+def test_generic_mehrez_combos():
+    """[MeH12] combinations (NEZ-NEZ, HYP-HYP) are expressible too."""
+    a = random_coo(90, 800, seed=12)
+    for combo in ("NL-NL", "HC-HC", "HL-NL"):
+        plan = two_level_partition(a, f=3, c=3, combo=combo)
+        assert int(plan.core_stats.nnz.sum()) == a.nnz

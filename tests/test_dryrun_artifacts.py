@@ -1,0 +1,73 @@
+"""Regression guard over the committed dry-run artifacts: every
+applicable (arch × shape × mesh) cell must have compiled OK, and the
+roofline fields must be self-consistent. Skips if artifacts are absent
+(fresh checkout before running the dry-run)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.config import SHAPES, get_arch, shape_applicable
+from repro.configs import ARCH_IDS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _load():
+    cells = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        c = json.load(open(p))
+        if c.get("tag"):
+            continue
+        cells[(c["arch"], c["shape"], c["mesh"])] = c
+    return cells
+
+
+cells = _load()
+
+
+@pytest.mark.skipif(not cells, reason="no dry-run artifacts (run dryrun --all)")
+def test_all_applicable_cells_compiled():
+    missing, failed = [], []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            ok, _ = shape_applicable(get_arch(arch), SHAPES[shape])
+            for mesh in ("pod16x16", "pod2x16x16"):
+                c = cells.get((arch, shape, mesh))
+                if c is None:
+                    missing.append((arch, shape, mesh))
+                elif ok and c["status"] != "ok":
+                    failed.append((arch, shape, mesh, c.get("error", "")[:80]))
+                elif not ok and c["status"] != "skipped":
+                    failed.append((arch, shape, mesh, "should be skipped"))
+    assert not missing, missing
+    assert not failed, failed
+
+
+@pytest.mark.skipif(not cells, reason="no dry-run artifacts")
+def test_roofline_fields_consistent():
+    for key, c in cells.items():
+        if c["status"] != "ok":
+            continue
+        assert c["compute_term_s"] >= 0 and c["memory_term_s"] >= 0
+        assert c["dominant"] in ("compute", "memory", "collective"), key
+        assert 0 <= c["useful_flop_ratio"] < 1.6, (key, c["useful_flop_ratio"])
+        assert 0 <= c["mfu"] <= 1.0, (key, c["mfu"])
+        # memory fit: params+temps under 16 GB HBM per device
+        mem = c.get("memory", {})
+        if mem:
+            total = mem.get("argument_bytes_per_device", 0)
+            assert total < 16 * 2**30, (key, total)
+
+
+@pytest.mark.skipif(not cells, reason="no dry-run artifacts")
+def test_multi_pod_halves_per_device_load():
+    """2× the chips (same global batch) → per-device compute term should
+    drop to ~half for train cells (batch sharded over pod×data)."""
+    for arch in ("qwen3-1.7b", "granite-8b"):
+        sp = cells[(arch, "train_4k", "pod16x16")]
+        mp = cells[(arch, "train_4k", "pod2x16x16")]
+        if sp["status"] == mp["status"] == "ok":
+            ratio = mp["compute_term_s"] / sp["compute_term_s"]
+            assert 0.3 < ratio < 0.75, (arch, ratio)
