@@ -3,8 +3,10 @@
 For each (matrix × node-count f × combo): LB_nodes, LB_cores, modeled
 scatter/compute/gather phase costs (α-β model — hardware-independent
 comparison, the CPU container cannot reproduce Grid'5000 wall-times),
-plus the hypergraph cut. Emits CSV rows; `summary()` reproduces the
-paper's Table 4.7 win-rate synthesis (claim C4).
+plus the hypergraph cut. Partitions run through the
+:mod:`repro.api` partitioner registry (no packing/execution — this is
+the planning-stage benchmark). Emits CSV rows; `summary()` reproduces
+the paper's Table 4.7 win-rate synthesis (claim C4).
 """
 from __future__ import annotations
 
@@ -13,8 +15,8 @@ from typing import Dict, Iterable, List
 
 import numpy as np
 
+from repro.api import Topology, resolve_partitioner
 from repro.configs.paper_pmvc import COMBOS, CORES_PER_NODE, MATRICES, NODE_COUNTS
-from repro.core import two_level_partition
 from repro.sparse import generate, PAPER_SUITE
 
 __all__ = ["run", "summary"]
@@ -33,22 +35,23 @@ def run(
     for name in matrices:
         a = generate(PAPER_SUITE[name])
         for f in node_counts:
+            topo = Topology(f, cores)
             for combo in combos:
                 t0 = time.perf_counter()
-                plan = two_level_partition(a, f, cores, combo)
+                part = resolve_partitioner(combo)(a, topo)
                 dt = (time.perf_counter() - t0) * 1e6
-                cost = plan.modeled_cost()
+                cost = part.modeled_cost()
                 row = dict(
                     matrix=name, f=f, combo=combo,
-                    lb_nodes=plan.lb_nodes, lb_cores=plan.lb_cores,
-                    cut=plan.hyper_cut, us_per_call=dt, **cost,
+                    lb_nodes=part.lb_nodes, lb_cores=part.lb_cores,
+                    cut=part.hyper_cut, us_per_call=dt, **cost,
                 )
                 rows.append(row)
                 if print_rows:
                     print(
-                        f"{name},{f},{combo},{plan.lb_nodes:.3f},{plan.lb_cores:.3f},"
+                        f"{name},{f},{combo},{part.lb_nodes:.3f},{part.lb_cores:.3f},"
                         f"{cost['scatter']:.2e},{cost['compute']:.2e},{cost['gather']:.2e},"
-                        f"{cost['construct_y']:.2e},{cost['total']:.2e},{plan.hyper_cut},{dt:.0f}"
+                        f"{cost['construct_y']:.2e},{cost['total']:.2e},{part.hyper_cut},{dt:.0f}"
                     )
     return rows
 

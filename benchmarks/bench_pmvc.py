@@ -1,10 +1,11 @@
 """Paper Figures 4.16–4.55: distributed PMVC phase decomposition.
 
-Runs the vmap-simulated executor on the matrix suite, reporting per-phase
-*realized* volumes (scatter bytes — naive vs selective exchange — compute
-FLOPs with padding waste, gather bytes) and CPU wall-time per PMVC
-iteration (algorithmic comparison only; roofline projections for TPU come
-from the dry-run artifacts).
+Opens one :class:`repro.api.SparseSession` per (matrix × combo) cell and
+runs the vmap-simulated executor, reporting per-phase *realized* volumes
+(scatter bytes — naive vs selective exchange — compute FLOPs with
+padding waste, gather bytes) and CPU wall-time per PMVC iteration
+(algorithmic comparison only; roofline projections for TPU come from the
+dry-run artifacts).
 """
 from __future__ import annotations
 
@@ -13,8 +14,7 @@ from typing import Dict, Iterable, List
 
 import numpy as np
 
-from repro.core import two_level_partition
-from repro.pmvc import build_selective_plan, pack_units, phase_costs, pmvc_simulate
+from repro.api import Topology, distribute
 from repro.sparse import csr_from_coo, generate, PAPER_SUITE
 
 __all__ = ["run"]
@@ -27,9 +27,11 @@ def run(
     combos: Iterable[str] = ("NL-HL", "NC-HC"),
     iters: int = 5,
     bm: int = 16,
+    exchange: str = "selective",
     print_rows: bool = True,
 ) -> List[Dict]:
     rows = []
+    topo = Topology(f, cores)
     if print_rows:
         print(
             "matrix,combo,units,lb_tiles,flop_eff,scatter_sel,scatter_naive,"
@@ -40,26 +42,24 @@ def run(
         x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
         y_ref = csr_from_coo(a).matvec(x)
         for combo in combos:
-            plan = two_level_partition(a, f, cores, combo)
-            unit = plan.elem_node.astype(np.int64) * cores + plan.elem_core
-            dp = pack_units(a, unit, f * cores, bm, bm)
-            sp = build_selective_plan(dp)
-            costs = phase_costs(dp, sp)
+            sess = distribute(a, topology=topo, combo=combo,
+                              exchange=exchange, block=bm)
+            costs = sess.costs()
             # Warm-up + timed runs (the iterative-solver steady state).
-            y = pmvc_simulate(dp, x)
+            y = sess.spmv(x)
             t0 = time.perf_counter()
             for _ in range(iters):
-                y = pmvc_simulate(dp, x)
+                y = sess.spmv(x)
             us = (time.perf_counter() - t0) / iters * 1e6
             err = float(np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-12))
             row = dict(
-                matrix=name, combo=combo, units=f * cores,
-                lb_tiles=dp.lb_tiles, us_per_call=us, rel_err=err, **costs,
+                matrix=name, combo=combo, units=topo.units,
+                us_per_call=us, rel_err=err, **costs,
             )
             rows.append(row)
             if print_rows:
                 print(
-                    f"{name},{combo},{f*cores},{dp.lb_tiles:.3f},"
+                    f"{name},{combo},{topo.units},{costs['lb_tiles']:.3f},"
                     f"{costs['flop_efficiency']:.3f},{costs['scatter_bytes']:.2e},"
                     f"{costs['scatter_bytes_naive']:.2e},{costs['gather_bytes']:.2e},"
                     f"{us:.0f},{err:.1e}"

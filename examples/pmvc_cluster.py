@@ -1,32 +1,26 @@
-"""The paper's end-to-end driver: distributed PMVC inside an iterative
-solver (power iteration — the PageRank use-case of ch.1 §3.1) on the
-Tim-Davis-matched matrix suite, with the thesis' four combinations.
+"""Distributed PMVC on a simulated (nodes × cores) cluster, end to end
+through the :mod:`repro.api` façade.
 
-Per (matrix × combo): partitions two-level (f nodes × c cores), packs
-Block-ELL shards, runs `iters` PMVC steps through the vmap-simulated
-cluster executor, and reports the paper's measurement columns (LB,
-scatter/gather volumes, FD) plus solver convergence.
+For each of the thesis' four partition combinations (NL-HL, NL-HC,
+NC-HL, NC-HC) this driver opens one ``SparseSession`` on a matrix from
+the Tim-Davis-matched suite — ``distribute`` partitions A two-level,
+packs per-unit Block-ELL shards, and plans the selective x exchange —
+then runs an iterative solver (default: the PageRank-style power
+iteration of ch.1 §3.1) through the vmap-simulated cluster executor and
+prints the paper's measurement columns (LB_nodes/LB_cores, FD, cut,
+FLOP efficiency, selective vs naive scatter bytes) plus solver output
+and the error against the sequential CSR oracle.
 
     PYTHONPATH=src python examples/pmvc_cluster.py --matrix thermal --iters 20
+    PYTHONPATH=src python examples/pmvc_cluster.py --solver pagerank --exchange replicated
 """
 import argparse
 
 import numpy as np
 
+from repro.api import EXCHANGES, SOLVERS, Topology, distribute
 from repro.configs.paper_pmvc import COMBOS
-from repro.core import two_level_partition
-from repro.pmvc import build_selective_plan, pack_units, phase_costs, pmvc_simulate
-from repro.sparse import PAPER_SUITE, csr_from_coo, generate
-
-
-def power_iteration(dp, n, iters):
-    x = np.ones(n, np.float32) / np.sqrt(n)
-    lam = 0.0
-    for _ in range(iters):
-        y = pmvc_simulate(dp, x)
-        lam = float(np.linalg.norm(y))
-        x = (y / max(lam, 1e-30)).astype(np.float32)
-    return lam, x
+from repro.sparse import PAPER_SUITE, generate
 
 
 def main() -> None:
@@ -36,31 +30,31 @@ def main() -> None:
     ap.add_argument("--cores", type=int, default=4)
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--solver", default="power_iteration", choices=SOLVERS.names())
+    ap.add_argument("--exchange", default="selective", choices=EXCHANGES.names())
     args = ap.parse_args()
 
     a = generate(PAPER_SUITE[args.matrix])
     print(f"matrix {args.matrix}: N={a.shape[0]} NNZ={a.nnz} "
           f"density={a.density:.4%}")
-    csr = csr_from_coo(a)
+    topo = Topology(args.nodes, args.cores)
 
     for combo in COMBOS:
-        plan = two_level_partition(a, args.nodes, args.cores, combo)
-        unit = plan.elem_node.astype(np.int64) * args.cores + plan.elem_core
-        dp = pack_units(a, unit, args.nodes * args.cores, args.block, args.block)
-        sp = build_selective_plan(dp)
-        costs = phase_costs(dp, sp)
-        lam, x = power_iteration(dp, a.shape[0], args.iters)
-        # Verify against the sequential CSR solver.
-        y_ref = csr.matvec(x)
-        y = pmvc_simulate(dp, x)
+        sess = distribute(a, topology=topo, combo=combo,
+                          exchange=args.exchange, block=args.block)
+        costs = sess.costs()
+        res = sess.solve(args.solver, iters=args.iters)
+        # Verify against the sequential CSR oracle.
+        y = sess.spmv(res.x)
+        y_ref = sess.spmv(res.x, executor="reference")
         err = float(np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-12))
         print(
-            f"{combo}: LB_nodes={plan.lb_nodes:.3f} LB_cores={plan.lb_cores:.3f} "
-            f"FD={plan.inter_fd} cut={plan.hyper_cut} "
+            f"{combo}: LB_nodes={costs['lb_nodes']:.3f} LB_cores={costs['lb_cores']:.3f} "
+            f"FD={costs['inter_fd']:.0f} cut={costs['hyper_cut']:.0f} "
             f"flop_eff={costs['flop_efficiency']:.3f} "
             f"scatter={costs['scatter_bytes']:.2e}B "
             f"(naive {costs['scatter_bytes_naive']:.2e}B) "
-            f"|A x|={lam:.4f} err={err:.1e}"
+            f"{res.solver}={res.value:.4f} err={err:.1e}"
         )
 
 

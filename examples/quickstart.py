@@ -28,7 +28,7 @@ def main() -> None:
     dc = DataConfig(cfg.vocab_size, seq_len=64, global_batch=8, seed=0)
 
     def batch_fn(step: int):
-        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=step)._batch_at(step))}
+        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=step).batch_at(step))}
 
     with tempfile.TemporaryDirectory() as d:
         ckpt = CheckpointManager(d, keep=2)

@@ -61,7 +61,7 @@ def main() -> None:
     dc = DataConfig(cfg.vocab_size, seq_len=seq_len, global_batch=batch, seed=0)
 
     def batch_fn(step: int):
-        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=step)._batch_at(step))}
+        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=step).batch_at(step))}
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)

@@ -1,0 +1,82 @@
+"""``repro.api`` — the public entry point for the paper pipeline.
+
+The thesis (*Etude de la Distribution de Calculs Creux sur une Grappe
+Multi-coeurs*) contributes a pipeline: partition A two-level across
+(nodes × cores), pack per-unit Block-ELL shards, plan the selective x
+exchange, then run PMVC inside an iterative solver. This package chains
+those stages behind one façade so callers never re-derive unit ids or
+re-wire the stages by hand.
+
+Usage — the whole workflow in five lines::
+
+    from repro.api import Topology, distribute
+
+    sess = distribute(A, topology=Topology(nodes=4, cores=4),
+                      combo="NL-HC", exchange="selective")
+    y = sess.spmv(x)                                  # one PMVC
+    res = sess.solve("power_iteration", iters=20)     # full solver run
+    print(sess.costs())                               # LB / FD / volumes
+
+Everything pluggable is a string-keyed registry entry:
+
+========================  =============================================
+stage                     built-in names
+========================  =============================================
+partitioner (``combo=``)  ``NL-HL  NL-HC  NC-HL  NC-HC`` (the thesis'
+                          four, plus any generic ``XX-YY`` [MeH12]
+                          combo), flat ``nezgt`` / ``hyper``
+exchange                  ``replicated`` (all-gather), ``selective``
+                          (static all_to_all of the C_Xk blocks)
+executor                  ``simulate`` (vmap, single host),
+                          ``shard_map`` (device mesh), ``reference``
+                          (sequential CSR oracle)
+solver                    ``power_iteration  jacobi  pagerank  cg``
+========================  =============================================
+
+Extend with the matching decorator — e.g.::
+
+    from repro.api import register_solver
+
+    @register_solver("richardson")
+    def richardson(sess, *, iters=50, tol=0.0, omega=0.1, b=None):
+        ...  # only touches A through sess.spmv
+
+then ``sess.solve("richardson")`` works on every (partitioner ×
+exchange × executor) cell. Executors can also be swapped per call:
+``sess.spmv(x, executor="reference")`` pins any cell against the CSR
+oracle.
+
+:mod:`repro.core` (partitioners) and :mod:`repro.pmvc` (packing +
+executors) remain the internal layer; importing the old loose functions
+from those package roots still works but emits ``DeprecationWarning``.
+"""
+from repro.api.exchange import EXCHANGES, register_exchange
+from repro.api.executors import EXECUTORS, register_executor
+from repro.api.partitioners import (
+    PARTITIONERS,
+    PartitionResult,
+    register_partitioner,
+    resolve_partitioner,
+)
+from repro.api.registry import Registry
+from repro.api.session import SparseSession, distribute
+from repro.api.solvers import SOLVERS, SolveResult, register_solver
+from repro.api.topology import Topology
+
+__all__ = [
+    "Topology",
+    "distribute",
+    "SparseSession",
+    "SolveResult",
+    "PartitionResult",
+    "Registry",
+    "PARTITIONERS",
+    "EXCHANGES",
+    "EXECUTORS",
+    "SOLVERS",
+    "register_partitioner",
+    "register_exchange",
+    "register_executor",
+    "register_solver",
+    "resolve_partitioner",
+]

@@ -1,0 +1,36 @@
+"""Exchange-strategy registry: how x reaches the units that need it.
+
+The paper's two fan-out regimes (ch.4 measurement decomposition):
+
+* ``"replicated"`` — *échange total*: every unit receives the whole x
+  (all-gather). Simple, and the baseline the selective volumes are
+  measured against.
+* ``"selective"`` — the static all_to_all schedule carrying only the
+  C_Xk block-columns each unit's tiles touch
+  (:func:`repro.pmvc.plan_device.build_selective_plan`).
+
+An exchange strategy is a callable ``(device_plan: DevicePlan) ->
+Optional[SelectivePlan]``; ``None`` means replicated semantics, which
+every executor understands.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.api.registry import Registry
+from repro.pmvc.plan_device import DevicePlan, SelectivePlan, build_selective_plan
+
+__all__ = ["EXCHANGES", "register_exchange"]
+
+EXCHANGES = Registry("exchange")
+register_exchange = EXCHANGES.register
+
+
+@register_exchange("replicated")
+def replicated(plan: DevicePlan) -> Optional[SelectivePlan]:
+    return None
+
+
+@register_exchange("selective")
+def selective(plan: DevicePlan) -> Optional[SelectivePlan]:
+    return build_selective_plan(plan)

@@ -1,0 +1,108 @@
+"""Executor registry: how a planned PMVC actually runs.
+
+An executor is a factory ``(session: SparseSession) -> Callable[[x],
+y]`` — it may capture compiled steps, meshes, or host-side state; the
+returned closure maps a length-M numpy vector to the length-N product.
+
+Built-ins:
+
+* ``"simulate"`` — vmap over a stacked unit axis on a single host (the
+  CPU test / paper-reproduction path). Honors the session's exchange
+  strategy: replicated gathers from the padded global x, selective runs
+  the emulated all_to_all workspace path.
+* ``"shard_map"`` — jitted shard_map over a device mesh, one unit per
+  device (the production path; needs ``topology.units`` JAX devices,
+  e.g. via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+* ``"reference"`` — the thesis' sequential CSR algorithm (ch.1 §5),
+  accumulated in float64: the oracle every other cell of the
+  (partitioner × exchange × executor) space is pinned against.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable
+
+import numpy as np
+
+from repro.api.registry import Registry
+from repro.pmvc.dist import (
+    make_pmvc_step,
+    make_unit_mesh,
+    pmvc_simulate,
+    pmvc_simulate_selective,
+    scatter_x_owned,
+)
+from repro.sparse.bell import pad_x_blocks
+from repro.sparse.formats import csr_from_coo
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.api.session import SparseSession
+
+__all__ = ["EXECUTORS", "register_executor"]
+
+EXECUTORS = Registry("executor")
+register_executor = EXECUTORS.register
+
+SpmvFn = Callable[[np.ndarray], np.ndarray]
+
+
+@register_executor("reference")
+def reference_executor(session: "SparseSession") -> SpmvFn:
+    csr = csr_from_coo(session.matrix)
+    val64 = csr.val.astype(np.float64)
+
+    def spmv(x: np.ndarray) -> np.ndarray:
+        y = np.zeros(csr.shape[0], dtype=np.float64)
+        xf = np.asarray(x, dtype=np.float64)
+        for i in range(csr.shape[0]):
+            lo, hi = csr.ptr[i], csr.ptr[i + 1]
+            y[i] = np.dot(val64[lo:hi], xf[csr.col[lo:hi]])
+        return y.astype(np.float32)
+
+    return spmv
+
+
+@register_executor("simulate")
+def simulate_executor(session: "SparseSession") -> SpmvFn:
+    dp, sp = session.device_plan, session.selective
+
+    def spmv(x: np.ndarray) -> np.ndarray:
+        if sp is None:
+            return pmvc_simulate(dp, np.asarray(x, np.float32))
+        return pmvc_simulate_selective(dp, sp, np.asarray(x, np.float32))
+
+    return spmv
+
+
+@register_executor("shard_map")
+def shard_map_executor(session: "SparseSession") -> SpmvFn:
+    import jax.numpy as jnp
+
+    dp, sp = session.device_plan, session.selective
+    mesh = make_unit_mesh(dp.num_units)
+    step = make_pmvc_step(dp, mesh, selective=sp)
+    tiles = jnp.asarray(dp.tiles)
+    tile_row = jnp.asarray(dp.tile_row)
+    n = dp.shape[0]
+
+    if sp is None:
+        tile_col = jnp.asarray(dp.tile_col)
+
+        def spmv(x: np.ndarray) -> np.ndarray:
+            xb = jnp.asarray(pad_x_blocks(np.asarray(x, np.float32), dp.num_col_blocks, dp.bn))
+            y = step(tiles, tile_row, tile_col, xb)
+            return np.asarray(y).reshape(-1)[:n]
+
+        return spmv
+
+    tile_col_local = jnp.asarray(sp.tile_col_local)
+    send_idx = jnp.asarray(sp.send_idx)
+    recv_src = jnp.asarray(sp.recv_src)
+    recv_lane = jnp.asarray(sp.recv_lane)
+
+    def spmv_selective(x: np.ndarray) -> np.ndarray:
+        xb = pad_x_blocks(np.asarray(x, np.float32), dp.num_col_blocks, dp.bn)
+        x_owned = jnp.asarray(scatter_x_owned(sp, xb))
+        y = step(tiles, tile_row, tile_col_local, x_owned, send_idx, recv_src, recv_lane)
+        return np.asarray(y).reshape(-1)[:n]
+
+    return spmv_selective

@@ -1,0 +1,156 @@
+"""The :class:`SparseSession` façade and :func:`distribute` entry point.
+
+One call chains the whole paper pipeline — two-level partition, per-unit
+BELL packing, exchange planning — and hands back a session whose
+``spmv`` / ``solve`` / ``costs`` methods run it under any registered
+executor. See :mod:`repro.api` for the workflow overview.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.api.exchange import EXCHANGES
+from repro.api.executors import EXECUTORS, SpmvFn
+from repro.api.partitioners import PartitionResult, resolve_partitioner
+from repro.api.solvers import SOLVERS, SolveResult
+from repro.api.topology import Topology
+from repro.pmvc.dist import phase_costs
+from repro.pmvc.plan_device import DevicePlan, SelectivePlan, pack_units
+from repro.sparse.formats import COO
+
+__all__ = ["SparseSession", "distribute"]
+
+
+class SparseSession:
+    """A distributed sparse matrix, planned once and executable anywhere.
+
+    Holds the immutable products of the planning pipeline (partition,
+    packed device plan, exchange schedule) plus per-executor compiled
+    state, built lazily and cached. Construct via :func:`distribute`.
+    """
+
+    def __init__(
+        self,
+        matrix: COO,
+        topology: Topology,
+        partition: PartitionResult,
+        device_plan: DevicePlan,
+        *,
+        exchange: str,
+        selective: Optional[SelectivePlan],
+        executor: str,
+    ):
+        self.matrix = matrix
+        self.topology = topology
+        self.partition = partition
+        self.device_plan = device_plan
+        self.exchange = exchange
+        self.selective = selective
+        self.executor = executor
+        self._spmv_cache: Dict[str, SpmvFn] = {}
+
+    # -- execution ---------------------------------------------------------
+
+    def _executor_fn(self, name: str) -> SpmvFn:
+        if name not in self._spmv_cache:
+            self._spmv_cache[name] = EXECUTORS.get(name)(self)
+        return self._spmv_cache[name]
+
+    def spmv(self, x: np.ndarray, *, executor: Optional[str] = None) -> np.ndarray:
+        """y = A @ x through the session's (or the named) executor."""
+        return self._executor_fn(executor or self.executor)(x)
+
+    def solve(self, solver: str = "power_iteration", **kw) -> SolveResult:
+        """Run a registered iterative solver (``iters=``, ``tol=``, ...)."""
+        return SOLVERS.get(solver)(self, **kw)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def combo(self) -> str:
+        return self.partition.name
+
+    def costs(self, bytes_per: int = 4) -> Dict[str, float]:
+        """Partition quality + realized per-phase volumes, one dict: the
+        paper's measurement columns (LB, FD, cut, scatter/gather bytes,
+        FLOP efficiency)."""
+        out: Dict[str, float] = {
+            "lb_nodes": self.partition.lb_nodes,
+            "lb_cores": self.partition.lb_cores,
+            "lb_tiles": self.device_plan.lb_tiles,
+            "inter_fd": float(self.partition.inter_fd),
+            "hyper_cut": float(self.partition.hyper_cut),
+        }
+        out.update(phase_costs(self.device_plan, self.selective, bytes_per=bytes_per))
+        return out
+
+    # -- cheap re-configuration (planning artifacts shared) ----------------
+
+    def with_executor(self, executor: str) -> "SparseSession":
+        """Same plans, different default executor; compiled state shared."""
+        EXECUTORS.get(executor)  # fail fast on unknown names
+        sess = SparseSession(
+            self.matrix,
+            self.topology,
+            self.partition,
+            self.device_plan,
+            exchange=self.exchange,
+            selective=self.selective,
+            executor=executor,
+        )
+        sess._spmv_cache = self._spmv_cache  # share compiled closures
+        return sess
+
+    def with_exchange(self, exchange: str) -> "SparseSession":
+        """Same partition/packing, re-planned exchange schedule."""
+        return SparseSession(
+            self.matrix,
+            self.topology,
+            self.partition,
+            self.device_plan,
+            exchange=exchange,
+            selective=EXCHANGES.get(exchange)(self.device_plan),
+            executor=self.executor,
+        )
+
+    def __repr__(self) -> str:
+        return (
+            f"SparseSession({self.combo} on {self.topology}, "
+            f"N={self.matrix.shape[0]}, NNZ={self.matrix.nnz}, "
+            f"exchange={self.exchange!r}, executor={self.executor!r})"
+        )
+
+
+def distribute(
+    a: COO,
+    *,
+    topology: Topology,
+    combo: str = "NL-HL",
+    exchange: str = "selective",
+    executor: str = "simulate",
+    block: Union[int, Tuple[int, int]] = 16,
+    seed: int = 0,
+    **partitioner_kw,
+) -> SparseSession:
+    """Plan the full paper pipeline for ``a`` and return a session.
+
+    ``combo`` names any registered partitioner — the thesis' four
+    two-level combinations (``"NL-HC"`` etc.), a generic ``"XX-YY"``
+    [MeH12] combo, flat ``"nezgt"``/``"hyper"``, or a user strategy
+    registered with :func:`repro.api.register_partitioner`.
+    """
+    bm, bn = (block, block) if isinstance(block, int) else block
+    part = resolve_partitioner(combo)(a, topology, seed=seed, **partitioner_kw)
+    dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
+    sp = EXCHANGES.get(exchange)(dp)
+    return SparseSession(
+        a,
+        topology,
+        part,
+        dp,
+        exchange=exchange,
+        selective=sp,
+        executor=executor,
+    )

@@ -1,0 +1,191 @@
+"""Iterative-solver drivers over a :class:`SparseSession`.
+
+The thesis motivates PMVC as the kernel of iterative methods (ch.1 §3:
+PageRank's power iteration, Jacobi, Krylov methods); a solver here is a
+callable ``(session, *, iters, tol, **kw) -> SolveResult`` that only
+touches A through ``session.spmv`` — so every registered solver runs
+unchanged on every (partitioner × exchange × executor) cell. New
+scenarios land as registry entries via :func:`register_solver`, not as
+new scripts.
+
+Built-ins: ``"power_iteration"``, ``"jacobi"``, ``"pagerank"``, ``"cg"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, List, Optional
+
+import numpy as np
+
+from repro.api.registry import Registry
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.api.session import SparseSession
+
+__all__ = ["SOLVERS", "SolveResult", "register_solver"]
+
+SOLVERS = Registry("solver")
+register_solver = SOLVERS.register
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """Outcome of a solver run.
+
+    ``value`` is the solver's scalar headline (dominant eigenvalue for
+    power iteration, final residual norm otherwise); ``residuals`` is
+    one entry per iteration (solver-specific metric, documented on each
+    driver).
+    """
+
+    solver: str
+    x: np.ndarray
+    value: float
+    residuals: List[float]
+    iters_run: int
+    converged: bool
+
+
+def _diag_of(session: "SparseSession") -> np.ndarray:
+    a = session.matrix
+    n = min(a.shape)
+    d = np.zeros(n, dtype=np.float64)
+    on_diag = a.row == a.col
+    np.add.at(d, a.row[on_diag], a.val[on_diag].astype(np.float64))
+    return d
+
+
+@register_solver("power_iteration")
+def power_iteration(
+    session: "SparseSession", *, iters: int = 50, tol: float = 0.0
+) -> SolveResult:
+    """x ← Ax / ‖Ax‖; residual per iter = |λ_k − λ_{k−1}|."""
+    n = session.matrix.shape[1]
+    x = np.ones(n, np.float32) / np.sqrt(n)
+    lam_prev, lam = 0.0, 0.0
+    residuals: List[float] = []
+    k = 0
+    for k in range(1, iters + 1):
+        y = session.spmv(x)
+        lam = float(np.linalg.norm(y))
+        x = (y / max(lam, 1e-30)).astype(np.float32)
+        residuals.append(abs(lam - lam_prev))
+        lam_prev = lam
+        if tol and residuals[-1] < tol:
+            break
+    return SolveResult(
+        solver="power_iteration",
+        x=x,
+        value=lam,
+        residuals=residuals,
+        iters_run=k,
+        converged=bool(tol and residuals and residuals[-1] < tol),
+    )
+
+
+@register_solver("jacobi")
+def jacobi(
+    session: "SparseSession",
+    *,
+    iters: int = 50,
+    tol: float = 0.0,
+    b: Optional[np.ndarray] = None,
+) -> SolveResult:
+    """Solve A z = b with z ← z + D⁻¹(b − Az); residual = ‖b − Az‖₂."""
+    n = session.matrix.shape[0]
+    d = _diag_of(session)
+    if np.any(d == 0.0):
+        raise ValueError("jacobi needs a zero-free diagonal")
+    bv = np.ones(n, np.float32) if b is None else np.asarray(b, np.float32)
+    z = np.zeros(n, np.float32)
+    r = bv - session.spmv(z)
+    residuals: List[float] = []
+    k = 0
+    for k in range(1, iters + 1):
+        z = (z + r / d).astype(np.float32)
+        r = bv - session.spmv(z)
+        residuals.append(float(np.linalg.norm(r)))
+        if tol and residuals[-1] < tol:
+            break
+    return SolveResult(
+        solver="jacobi",
+        x=z,
+        value=residuals[-1] if residuals else 0.0,
+        residuals=residuals,
+        iters_run=k,
+        converged=bool(tol and residuals and residuals[-1] < tol),
+    )
+
+
+@register_solver("pagerank")
+def pagerank(
+    session: "SparseSession",
+    *,
+    iters: int = 50,
+    tol: float = 0.0,
+    damping: float = 0.85,
+) -> SolveResult:
+    """r ← d·Ar + (1−d)/n on the session's link matrix (assumed
+    column-normalized, ch.1 §3.1); residual = ‖r_k − r_{k−1}‖₁."""
+    n = session.matrix.shape[1]
+    r = np.full(n, 1.0 / n, np.float32)
+    residuals: List[float] = []
+    k = 0
+    for k in range(1, iters + 1):
+        r_new = damping * session.spmv(r) + (1.0 - damping) / n
+        s = float(np.abs(r_new).sum())
+        r_new = (r_new / max(s, 1e-30)).astype(np.float32)
+        residuals.append(float(np.abs(r_new - r).sum()))
+        r = r_new
+        if tol and residuals[-1] < tol:
+            break
+    return SolveResult(
+        solver="pagerank",
+        x=r,
+        value=residuals[-1] if residuals else 0.0,
+        residuals=residuals,
+        iters_run=k,
+        converged=bool(tol and residuals and residuals[-1] < tol),
+    )
+
+
+@register_solver("cg")
+def conjugate_gradient(
+    session: "SparseSession",
+    *,
+    iters: int = 50,
+    tol: float = 0.0,
+    b: Optional[np.ndarray] = None,
+) -> SolveResult:
+    """Conjugate gradient for SPD A (the suite's SPD matrices);
+    residual = ‖b − Az‖₂."""
+    n = session.matrix.shape[0]
+    bv = np.ones(n, np.float32) if b is None else np.asarray(b, np.float32)
+    z = np.zeros(n, np.float32)
+    r = bv - session.spmv(z)
+    p = r.copy()
+    rs = float(r @ r)
+    residuals: List[float] = [float(np.sqrt(rs))]
+    k = 0
+    for k in range(1, iters + 1):
+        ap = session.spmv(p)
+        denom = float(p @ ap)
+        if abs(denom) < 1e-30:
+            break
+        alpha = rs / denom
+        z = (z + alpha * p).astype(np.float32)
+        r = (r - alpha * ap).astype(np.float32)
+        rs_new = float(r @ r)
+        residuals.append(float(np.sqrt(rs_new)))
+        if tol and residuals[-1] < tol:
+            break
+        p = (r + (rs_new / max(rs, 1e-30)) * p).astype(np.float32)
+        rs = rs_new
+    return SolveResult(
+        solver="cg",
+        x=z,
+        value=residuals[-1],
+        residuals=residuals,
+        iters_run=k,
+        converged=bool(tol and residuals[-1] < tol),
+    )

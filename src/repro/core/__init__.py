@@ -1,13 +1,51 @@
 """The paper's primary contribution: NEZGT + hypergraph two-level
-distribution of sparse computations (see DESIGN.md §1)."""
-from repro.core.nezgt import NezgtResult, nezgt_partition
-from repro.core.hypergraph import Hypergraph, HgResult, hypergraph_from_coo, partition_hypergraph, connectivity_cut
-from repro.core.combined import PAPER_COMBOS, TwoLevelPlan, two_level_partition, LevelSpec, partition_lines
-from repro.core.metrics import load_balance, fd, padding_waste, summarize_loads
+distribution of sparse computations (see DESIGN.md §1).
 
-__all__ = [
-    "NezgtResult", "nezgt_partition", "Hypergraph", "HgResult",
-    "hypergraph_from_coo", "partition_hypergraph", "connectivity_cut",
-    "PAPER_COMBOS", "TwoLevelPlan", "two_level_partition", "LevelSpec",
-    "partition_lines", "load_balance", "fd", "padding_waste", "summarize_loads",
-]
+This package is now the *internal* partitioning layer behind
+:mod:`repro.api` — build pipelines with ``repro.api.distribute`` /
+``SparseSession`` instead of chaining these functions by hand. The old
+names remain importable from this package root for compatibility but
+emit :class:`DeprecationWarning`; import from the submodules
+(``repro.core.combined`` etc.) for warning-free internal use.
+"""
+import warnings
+
+_EXPORTS = {
+    "NezgtResult": "repro.core.nezgt",
+    "nezgt_partition": "repro.core.nezgt",
+    "Hypergraph": "repro.core.hypergraph",
+    "HgResult": "repro.core.hypergraph",
+    "hypergraph_from_coo": "repro.core.hypergraph",
+    "partition_hypergraph": "repro.core.hypergraph",
+    "connectivity_cut": "repro.core.hypergraph",
+    "PAPER_COMBOS": "repro.core.combined",
+    "TwoLevelPlan": "repro.core.combined",
+    "two_level_partition": "repro.core.combined",
+    "LevelSpec": "repro.core.combined",
+    "partition_lines": "repro.core.combined",
+    "load_balance": "repro.core.metrics",
+    "fd": "repro.core.metrics",
+    "padding_waste": "repro.core.metrics",
+    "summarize_loads": "repro.core.metrics",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        warnings.warn(
+            f"importing {name!r} from repro.core is deprecated; use the "
+            f"repro.api façade (distribute/SparseSession) or import from "
+            f"{_EXPORTS[name]} directly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -50,7 +50,10 @@ class SyntheticStream:
         rng = np.random.default_rng(cfg.seed)
         self.succ = rng.permutation(cfg.vocab_size)
 
-    def _batch_at(self, step: int) -> np.ndarray:
+    def batch_at(self, step: int) -> np.ndarray:
+        """This shard's batch for an arbitrary ``step``, independent of the
+        iterator cursor — the random-access entry trainers build their
+        ``batch_fn`` on (deterministic per (seed, step, shard))."""
         cfg = self.cfg
         b_loc = cfg.global_batch // self.num_shards
         # Independent stream per (step, global row) — elastic-safe: a
@@ -74,11 +77,22 @@ class SyntheticStream:
             )
         return toks.astype(np.int32)
 
+    def _batch_at(self, step: int) -> np.ndarray:
+        import warnings
+
+        warnings.warn(
+            "SyntheticStream._batch_at is deprecated; use the public "
+            "batch_at method",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.batch_at(step)
+
     def __iter__(self) -> Iterator[np.ndarray]:
         return self
 
     def __next__(self) -> np.ndarray:
-        batch = self._batch_at(self.step)
+        batch = self.batch_at(self.step)
         self.step += 1
         return batch
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sparse.bell import BellShard
+from repro.sparse.bell import BellShard, pad_x_blocks
 from repro.kernels.spmv.kernel import bell_spmv
 from repro.kernels.spmv.ref import bell_spmv_ref
 
@@ -27,13 +27,11 @@ def pack_inputs(
     shard: BellShard, x: np.ndarray, bn: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     ncb = -(-x.shape[0] // bn)
-    xp = np.zeros(ncb * bn, dtype=np.float32)
-    xp[: x.shape[0]] = x
     return (
         jnp.asarray(shard.tiles),
         jnp.asarray(shard.tile_row),
         jnp.asarray(shard.tile_col),
-        jnp.asarray(xp.reshape(ncb, bn)),
+        jnp.asarray(pad_x_blocks(x, ncb, bn)),
     )
 
 

@@ -39,7 +39,12 @@ from repro.launch.shardings import (  # noqa: E402
 )
 from repro.launch.specs import make_step_bundle  # noqa: E402
 from repro.models.moe import MeshCtx  # noqa: E402
-from repro.roofline.analysis import model_flops, parse_collectives, roofline_terms  # noqa: E402
+from repro.roofline.analysis import (  # noqa: E402
+    cost_analysis_dict,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
 from repro.config import TrainConfig  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
@@ -125,7 +130,7 @@ def _compile_costs(cfg, shape, ctx, mesh, train_cfg, kv_fsdp=False):
     in_sh = _shardings_for(bundle, cfg, mesh, kv_fsdp=kv_fsdp)
     lowered = jax.jit(bundle.step_fn, in_shardings=in_sh).lower(*bundle.args)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return (
         float(ca.get("flops", 0.0)),

@@ -61,7 +61,7 @@ def main() -> None:
     dc = DataConfig(cfg.vocab_size, seq_len=args.seq, global_batch=args.batch, seed=0)
 
     def batch_fn(s: int):
-        return {"tokens": SyntheticStream(dc, start_step=s)._batch_at(s)}
+        return {"tokens": SyntheticStream(dc, start_step=s).batch_at(s)}
 
     def to_device(batch):
         b = {k: jnp.asarray(v) for k, v in batch.items()}

@@ -1,7 +1,46 @@
-from repro.pmvc.plan_device import DevicePlan, SelectivePlan, pack_units, build_selective_plan
-from repro.pmvc.dist import pmvc_simulate, make_pmvc_step, make_unit_mesh, phase_costs, pad_x
+"""Distributed PMVC packing and executors — the *internal* runtime layer
+behind :mod:`repro.api`.
 
-__all__ = [
-    "DevicePlan", "SelectivePlan", "pack_units", "build_selective_plan",
-    "pmvc_simulate", "make_pmvc_step", "make_unit_mesh", "phase_costs", "pad_x",
-]
+Build pipelines with ``repro.api.distribute`` / ``SparseSession``
+instead of chaining these functions by hand. The old names remain
+importable from this package root for compatibility but emit
+:class:`DeprecationWarning`; import from the submodules
+(``repro.pmvc.plan_device``, ``repro.pmvc.dist``) for warning-free
+internal use.
+"""
+import warnings
+
+_EXPORTS = {
+    "DevicePlan": "repro.pmvc.plan_device",
+    "SelectivePlan": "repro.pmvc.plan_device",
+    "pack_units": "repro.pmvc.plan_device",
+    "build_selective_plan": "repro.pmvc.plan_device",
+    "pmvc_simulate": "repro.pmvc.dist",
+    "pmvc_simulate_selective": "repro.pmvc.dist",
+    "make_pmvc_step": "repro.pmvc.dist",
+    "make_unit_mesh": "repro.pmvc.dist",
+    "phase_costs": "repro.pmvc.dist",
+    "pad_x": "repro.pmvc.dist",
+    "scatter_x_owned": "repro.pmvc.dist",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        warnings.warn(
+            f"importing {name!r} from repro.pmvc is deprecated; use the "
+            f"repro.api façade (distribute/SparseSession) or import from "
+            f"{_EXPORTS[name]} directly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.pmvc' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -28,21 +28,37 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.pmvc.plan_device import DevicePlan, SelectivePlan
+from repro.sparse.bell import pad_x_blocks
 
 __all__ = [
     "pmvc_simulate",
+    "pmvc_simulate_selective",
     "make_pmvc_step",
     "make_unit_mesh",
     "phase_costs",
     "pad_x",
+    "scatter_x_owned",
 ]
 
 
 def pad_x(x: np.ndarray, ncb: int, bn: int) -> np.ndarray:
-    xp = np.zeros(ncb * bn, dtype=np.float32)
-    xp[: x.shape[0]] = x
-    return xp.reshape(ncb, bn)
+    """Block-pad x; alias of :func:`repro.sparse.bell.pad_x_blocks`."""
+    return pad_x_blocks(x, ncb, bn)
+
+
+def scatter_x_owned(sp: SelectivePlan, xb: np.ndarray) -> np.ndarray:
+    """Place padded x blocks into the block-col-sharded ``[U, per, bn]``
+    layout the selective executors start from (unit u owns ``owned[u]``)."""
+    x_owned = np.zeros((sp.num_units, sp.blocks_per_unit, xb.shape[1]), np.float32)
+    valid = sp.owned >= 0
+    x_owned[valid] = xb[sp.owned[valid]]
+    return x_owned
 
 
 def _unit_spmv(tiles: jax.Array, tile_row: jax.Array, xb_of_tile: jax.Array, nrb: int) -> jax.Array:
@@ -66,6 +82,41 @@ def pmvc_simulate(plan: DevicePlan, x: np.ndarray) -> np.ndarray:
     partials = jax.vmap(one_unit)(
         jnp.asarray(plan.tiles), jnp.asarray(plan.tile_row), jnp.asarray(plan.tile_col)
     )  # [U, NRB, bm]
+    y = partials.sum(axis=0).reshape(-1)
+    return np.asarray(y)[: plan.shape[0]]
+
+
+def pmvc_simulate_selective(
+    plan: DevicePlan, sp: SelectivePlan, x: np.ndarray
+) -> np.ndarray:
+    """vmap execution of the *selective* exchange on a single host.
+
+    Emulates the static all_to_all (``recv[u, v, l] = send[v, u, l]``)
+    so the exact workspace-gather path of the shard_map executor — x
+    block-col-sharded, ``send_idx`` routes, compact ``tile_col_local``
+    indexing — is testable without a multi-device mesh.
+    """
+    nrb, ncb = plan.num_row_blocks, plan.num_col_blocks
+    x_owned = jnp.asarray(scatter_x_owned(sp, pad_x_blocks(x, ncb, plan.bn)))
+    idx = jnp.asarray(sp.send_idx)  # [U, U, L]
+    safe = jnp.maximum(idx, 0)
+    send = jnp.where(
+        (idx >= 0)[..., None], x_owned[jnp.arange(sp.num_units)[:, None, None], safe], 0.0
+    )  # [U(src), U(dst), L, bn]
+    recv = jnp.swapaxes(send, 0, 1)  # [U(dst), U(src), L, bn]
+
+    def one_unit(tiles, tile_row, tile_col_local, recv_u, src, lane):
+        ws = recv_u[src, lane]  # [W, bn] compact workspace
+        return _unit_spmv(tiles, tile_row, ws[tile_col_local], nrb)
+
+    partials = jax.vmap(one_unit)(
+        jnp.asarray(plan.tiles),
+        jnp.asarray(plan.tile_row),
+        jnp.asarray(sp.tile_col_local),
+        recv,
+        jnp.asarray(sp.recv_src),
+        jnp.asarray(sp.recv_lane),
+    )
     y = partials.sum(axis=0).reshape(-1)
     return np.asarray(y)[: plan.shape[0]]
 
@@ -105,7 +156,7 @@ def make_pmvc_step(
             return jax.lax.psum(y_part, "unit")
 
         return jax.jit(
-            jax.shard_map(
+            _shard_map(
                 step,
                 mesh=mesh,
                 in_specs=(P("unit"), P("unit"), P("unit"), P()),
@@ -129,7 +180,7 @@ def make_pmvc_step(
         return jax.lax.psum(y_part, "unit")
 
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             step_selective,
             mesh=mesh,
             in_specs=(

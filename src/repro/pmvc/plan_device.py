@@ -154,7 +154,8 @@ def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
     per = -(-ncb // u_n)
     owned = np.full((u_n, per), -1, dtype=np.int32)
     for u in range(u_n):
-        lo, hi = u * per, min((u + 1) * per, ncb)
+        # Trailing units own nothing when NCB < U * per.
+        lo, hi = min(u * per, ncb), min((u + 1) * per, ncb)
         owned[u, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
     owner_of_block = np.zeros(ncb, dtype=np.int32)
     local_of_block = np.zeros(ncb, dtype=np.int32)

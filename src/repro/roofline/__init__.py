@@ -1,6 +1,8 @@
 from repro.roofline.hw import PEAK_FLOPS_BF16, HBM_BW, ICI_BW, CHIP
 from repro.roofline.analysis import (
     parse_collectives, roofline_terms, model_flops, RooflineTerms, CollectiveStats,
+    cost_analysis_dict,
 )
 __all__ = ["PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW", "CHIP", "parse_collectives",
-           "roofline_terms", "model_flops", "RooflineTerms", "CollectiveStats"]
+           "roofline_terms", "model_flops", "RooflineTerms", "CollectiveStats",
+           "cost_analysis_dict"]

@@ -21,7 +21,23 @@ from typing import Dict, Optional
 from repro.config import ArchConfig, ShapeConfig
 from repro.roofline.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
-__all__ = ["CollectiveStats", "parse_collectives", "RooflineTerms", "roofline_terms", "model_flops"]
+__all__ = [
+    "CollectiveStats",
+    "parse_collectives",
+    "RooflineTerms",
+    "roofline_terms",
+    "model_flops",
+    "cost_analysis_dict",
+]
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across JAX versions: 0.4.x
+    returns a one-dict-per-device list, newer versions a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

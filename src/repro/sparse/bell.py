@@ -24,7 +24,20 @@ import numpy as np
 
 from repro.sparse.formats import COO
 
-__all__ = ["BellShard", "BellMatrix", "pack_bell", "tile_counts"]
+__all__ = ["BellShard", "BellMatrix", "pack_bell", "tile_counts", "pad_x_blocks"]
+
+
+def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:
+    """Zero-pad ``x`` to ``num_col_blocks * bn`` and reshape to the
+    ``[NCB, bn]`` block-column layout every BELL consumer gathers from.
+
+    The single block-pad implementation — the distributed executor
+    (:mod:`repro.pmvc.dist`) and the per-shard kernel entry
+    (:func:`repro.kernels.spmv.ops.pack_inputs`) both route here.
+    """
+    xp = np.zeros(num_col_blocks * bn, dtype=np.float32)
+    xp[: x.shape[0]] = x
+    return xp.reshape(num_col_blocks, bn)
 
 
 @dataclasses.dataclass(frozen=True)

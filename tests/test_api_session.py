@@ -1,0 +1,229 @@
+"""Equivalence tier for the `repro.api` façade: every (combo × exchange
+× executor) cell must reproduce the sequential CSR oracle, and the
+registries must be extensible without touching the pipeline."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    EXCHANGES,
+    EXECUTORS,
+    PARTITIONERS,
+    SOLVERS,
+    Registry,
+    Topology,
+    distribute,
+    register_solver,
+    resolve_partitioner,
+)
+from repro.sparse import csr_from_coo, generate, PAPER_SUITE
+from repro.sparse.formats import coo_from_dense
+from repro.sparse.generate import random_coo
+
+COMBOS = ("NL-HL", "NL-HC", "NC-HL", "NC-HC")
+TOPO = Topology(4, 2)
+
+
+def _rel_err(y, y_ref):
+    return float(np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-30))
+
+
+@pytest.fixture(scope="module")
+def problem():
+    a = random_coo(384, 5000, seed=11)
+    x = np.random.default_rng(5).standard_normal(a.shape[1]).astype(np.float32)
+    return a, x, csr_from_coo(a).matvec(x)
+
+
+@pytest.fixture(scope="module", params=COMBOS)
+def combo_session(request, problem):
+    a, _, _ = problem
+    return distribute(a, topology=TOPO, combo=request.param, exchange="selective")
+
+
+@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("executor", ["simulate", "reference"])
+def test_equivalence_sweep(combo_session, problem, exchange, executor):
+    """4 combos × 2 exchanges × 2 executors pinned against csr.matvec."""
+    _, x, y_ref = problem
+    sess = combo_session.with_exchange(exchange)
+    y = sess.spmv(x, executor=executor)
+    assert y.shape == y_ref.shape
+    assert _rel_err(y, y_ref) < 1e-5, (sess.combo, exchange, executor)
+
+
+def test_topology_unit_mapping():
+    t = Topology(4, 4)
+    assert t.units == 16
+    nodes = np.array([0, 1, 3])
+    cores = np.array([0, 2, 3])
+    units = t.unit_of(nodes, cores)
+    np.testing.assert_array_equal(units, [0, 6, 15])
+    np.testing.assert_array_equal(t.node_of(units), nodes)
+    np.testing.assert_array_equal(t.core_of(units), cores)
+    with pytest.raises(ValueError):
+        Topology(0, 4)
+
+
+def test_builtin_registries_populated():
+    for name in COMBOS + ("nezgt", "hyper"):
+        assert name in PARTITIONERS
+    assert set(EXCHANGES.names()) >= {"replicated", "selective"}
+    assert set(EXECUTORS.names()) >= {"simulate", "shard_map", "reference"}
+    assert set(SOLVERS.names()) >= {"power_iteration", "jacobi", "pagerank", "cg"}
+
+
+def test_generic_combo_resolved_on_demand(problem):
+    """[MeH12] combos like NC-NC work without explicit registration."""
+    a, x, y_ref = problem
+    assert "NC-NC" not in PARTITIONERS
+    sess = distribute(a, topology=Topology(2, 2), combo="NC-NC")
+    assert _rel_err(sess.spmv(x), y_ref) < 1e-5
+    with pytest.raises(KeyError, match="unknown partitioner"):
+        resolve_partitioner("no-such-strategy")
+
+
+def test_flat_partitioners(problem):
+    a, x, y_ref = problem
+    for combo in ("nezgt", "hyper"):
+        sess = distribute(a, topology=Topology(2, 2), combo=combo)
+        assert _rel_err(sess.spmv(x), y_ref) < 1e-5
+        assert sess.partition.plan is None
+        assert sess.partition.lb_units >= 1.0
+        with pytest.raises(ValueError, match="no two-level plan"):
+            sess.partition.modeled_cost()
+
+
+def test_costs_merge_partition_and_phase_metrics(combo_session):
+    costs = combo_session.costs()
+    for key in (
+        "lb_nodes", "lb_cores", "lb_tiles", "inter_fd", "hyper_cut",
+        "scatter_bytes", "scatter_bytes_naive", "gather_bytes",
+        "compute_flops", "flop_efficiency",
+    ):
+        assert key in costs, key
+    assert costs["scatter_bytes"] <= costs["scatter_bytes_naive"] + 1e-9
+    assert 0 < costs["flop_efficiency"] <= 1.0
+
+
+def test_with_executor_shares_compiled_state(combo_session, problem):
+    _, x, _ = problem
+    ref_sess = combo_session.with_executor("reference")
+    assert ref_sess.executor == "reference"
+    assert ref_sess._spmv_cache is combo_session._spmv_cache
+    np.testing.assert_allclose(
+        ref_sess.spmv(x), combo_session.spmv(x, executor="reference")
+    )
+    with pytest.raises(KeyError, match="unknown executor"):
+        combo_session.with_executor("gpu-magic")
+
+
+def _spd_session(n=96, seed=3):
+    rng = np.random.default_rng(seed)
+    b = np.where(rng.random((n, n)) < 0.06, rng.standard_normal((n, n)), 0.0)
+    spd = b @ b.T + n * np.eye(n)
+    a = coo_from_dense(spd.astype(np.float32))
+    return distribute(a, topology=Topology(2, 2), combo="NL-HC"), spd
+
+
+def test_solver_power_iteration(combo_session):
+    res = combo_session.solve("power_iteration", iters=8)
+    assert res.iters_run == 8 and len(res.residuals) == 8
+    assert res.value > 0
+
+
+def test_solver_jacobi_converges_on_diag_dominant():
+    sess, _ = _spd_session()
+    b = np.ones(sess.matrix.shape[0], np.float32)
+    res = sess.solve("jacobi", iters=100, tol=1e-4, b=b)
+    assert res.converged, res.residuals[-5:]
+    assert _rel_err(sess.spmv(res.x, executor="reference"), b) < 1e-3
+
+
+def test_solver_cg_converges_on_spd():
+    sess, _ = _spd_session()
+    b = np.ones(sess.matrix.shape[0], np.float32)
+    res = sess.solve("cg", iters=60, tol=1e-5, b=b)
+    assert res.converged
+    assert res.residuals[-1] < res.residuals[0]
+
+
+def test_solver_pagerank_contracts(problem):
+    a, _, _ = problem
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HL")
+    res = sess.solve("pagerank", iters=10)
+    assert res.x.shape == (a.shape[1],)
+    assert np.isclose(np.abs(res.x).sum(), 1.0, atol=1e-4)
+
+
+def test_user_registration_round_trip(problem):
+    a, x, _ = problem
+    reg = Registry("widget")
+
+    @reg.register("w1")
+    def w1():
+        return 1
+
+    assert reg.get("w1") is w1
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("w1", lambda: 2)
+
+    @register_solver("test-identity-probe")
+    def identity_probe(sess, *, iters=1, tol=0.0):
+        from repro.api.solvers import SolveResult
+
+        return SolveResult("test-identity-probe", sess.spmv(x), 0.0, [], 1, True)
+
+    try:
+        sess = distribute(a, topology=Topology(2, 2), combo="NL-HL")
+        res = sess.solve("test-identity-probe")
+        np.testing.assert_allclose(res.x, sess.spmv(x))
+    finally:
+        SOLVERS._entries.pop("test-identity-probe", None)
+
+
+def test_deprecation_shims_still_export_old_names():
+    with pytest.warns(DeprecationWarning):
+        from repro.core import two_level_partition  # noqa: F401
+    with pytest.warns(DeprecationWarning):
+        from repro.pmvc import pack_units  # noqa: F401
+
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.api import Topology, distribute
+    from repro.sparse import csr_from_coo
+    from repro.sparse.generate import random_coo
+
+    a = random_coo(256, 3000, seed=9)
+    x = np.random.default_rng(1).standard_normal(a.shape[1]).astype(np.float32)
+    y_ref = csr_from_coo(a).matvec(x)
+    for exchange in ("replicated", "selective"):
+        sess = distribute(a, topology=Topology(2, 2), combo="NL-HC",
+                          exchange=exchange, executor="shard_map")
+        y = sess.spmv(x)
+        err = np.abs(y - y_ref).max() / np.abs(y_ref).max()
+        assert err < 1e-5, (exchange, err)
+    print("API_SHARDED_OK")
+    """
+)
+
+
+def test_shard_map_executor_subprocess():
+    import os
+
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert "API_SHARDED_OK" in res.stdout, res.stdout + res.stderr

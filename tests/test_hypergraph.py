@@ -1,6 +1,7 @@
 """Hypergraph partitioner: cut semantics + balance + refinement gain."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hypergraph import (
     connectivity_cut,

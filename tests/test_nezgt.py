@@ -1,7 +1,7 @@
 """NEZGT heuristic: paper ch.3 §4.2.1 / ch.4 §2 behaviour + invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.nezgt import fd_criterion, fragment_loads, nezgt_partition
 

@@ -100,12 +100,14 @@ _SUBPROC = textwrap.dedent(
 
 
 def test_sharded_paths_subprocess():
+    import os
+
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROC],
         capture_output=True,
         text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
+        env={**os.environ, "PYTHONPATH": "src"},
         cwd=__file__.rsplit("/tests/", 1)[0],
     )
     assert "SHARDED_OK" in res.stdout, res.stdout + res.stderr

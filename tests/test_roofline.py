@@ -7,6 +7,7 @@ from repro.config import SHAPES, get_arch
 from repro.roofline import (
     ICI_BW,
     PEAK_FLOPS_BF16,
+    cost_analysis_dict,
     model_flops,
     parse_collectives,
     roofline_terms,
@@ -62,7 +63,7 @@ def test_real_compiled_module_roundtrip():
     compiled = f.lower(sds, sds).compile()
     st = parse_collectives(compiled.as_text())  # 1-dev: no collectives
     assert st.total_count >= 0
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     assert ca.get("flops", 0) > 0
 
 
