@@ -13,10 +13,9 @@ from __future__ import annotations
 import time
 from typing import Dict, Iterable, List
 
-import numpy as np
 
 from repro.api import Topology, resolve_partitioner
-from repro.configs.paper_pmvc import COMBOS, CORES_PER_NODE, MATRICES, NODE_COUNTS
+from repro.configs.paper_pmvc import COMBOS
 from repro.sparse import generate, PAPER_SUITE
 
 __all__ = ["run", "summary"]

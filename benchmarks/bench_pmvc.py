@@ -1,16 +1,27 @@
-"""Paper Figures 4.16–4.55: distributed PMVC phase decomposition.
+"""Paper Figures 4.16–4.55: distributed PMVC phase decomposition,
+swept over the SpMM batch width B.
 
 Opens one :class:`repro.api.SparseSession` per (matrix × combo) cell and
 runs the vmap-simulated executor, reporting per-phase *realized* volumes
 (scatter bytes — naive vs selective exchange — compute FLOPs with
-padding waste, gather bytes) and CPU wall-time per PMVC iteration
+padding waste, gather bytes) and CPU wall-time per PMVC call
 (algorithmic comparison only; roofline projections for TPU come from the
 dry-run artifacts).
+
+Batch-first sweep: each cell runs B ∈ ``batch_sizes`` stacked
+right-hand sides through one SpMM and compares against B sequential
+single-vector calls — ``speedup_per_rhs`` is the amortization the
+batched exchange buys, ``scatter_bytes_per_rhs`` the shrinking
+per-vector wire cost (paper ch.4's startup-vs-payload decomposition).
+
+``run(json_path=...)`` additionally emits the rows as machine-readable
+JSON (``BENCH_pmvc.json``) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -18,6 +29,14 @@ from repro.api import Topology, distribute
 from repro.sparse import csr_from_coo, generate, PAPER_SUITE
 
 __all__ = ["run"]
+
+
+def _time_call(fn, iters: int) -> float:
+    fn()  # warm-up (jit compile + device placement)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def run(
@@ -28,45 +47,92 @@ def run(
     iters: int = 5,
     bm: int = 16,
     exchange: str = "selective",
+    batch_sizes: Iterable[int] = (1, 8, 64),
+    json_path: Optional[str] = None,
     print_rows: bool = True,
 ) -> List[Dict]:
-    rows = []
+    rows: List[Dict] = []
     topo = Topology(f, cores)
     if print_rows:
         print(
-            "matrix,combo,units,lb_tiles,flop_eff,scatter_sel,scatter_naive,"
-            "gather,us_per_call,rel_err"
+            "matrix,combo,units,B,lb_tiles,flop_eff,scatter_per_rhs,"
+            "scatter_naive,gather,us_per_call,us_per_rhs,seq_us_per_rhs,"
+            "speedup_per_rhs,rel_err"
         )
     for name in matrices:
         a = generate(PAPER_SUITE[name])
-        x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
-        y_ref = csr_from_coo(a).matvec(x)
+        rng = np.random.default_rng(0)
+        bmax = max(batch_sizes)
+        xs = rng.standard_normal((bmax, a.shape[1])).astype(np.float32)
+        csr = csr_from_coo(a)
+        ys_ref = np.stack([csr.matvec(xs[i]) for i in range(bmax)])
         for combo in combos:
             sess = distribute(a, topology=topo, combo=combo,
                               exchange=exchange, block=bm)
-            costs = sess.costs()
-            # Warm-up + timed runs (the iterative-solver steady state).
-            y = sess.spmv(x)
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                y = sess.spmv(x)
-            us = (time.perf_counter() - t0) / iters * 1e6
-            err = float(np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-12))
-            row = dict(
-                matrix=name, combo=combo, units=topo.units,
-                us_per_call=us, rel_err=err, **costs,
-            )
-            rows.append(row)
-            if print_rows:
-                print(
-                    f"{name},{combo},{topo.units},{costs['lb_tiles']:.3f},"
-                    f"{costs['flop_efficiency']:.3f},{costs['scatter_bytes']:.2e},"
-                    f"{costs['scatter_bytes_naive']:.2e},{costs['gather_bytes']:.2e},"
-                    f"{us:.0f},{err:.1e}"
+            # Sequential baseline: B independent single-vector calls pay
+            # one exchange each (the pre-batching serving loop), so the
+            # per-RHS sequential cost is the mean single-call time,
+            # independent of B.
+            x0 = xs[0]
+            seq_us_per_rhs = _time_call(lambda: sess.spmv(x0), iters)
+            for b in batch_sizes:
+                xb = xs[0] if b == 1 else xs[:b]
+                y = sess.spmv(xb)
+                us = _time_call(lambda: sess.spmv(xb), iters)
+                y2 = y[None] if b == 1 else y
+                err = float(
+                    np.abs(y2 - ys_ref[:b]).max()
+                    / (np.abs(ys_ref[:b]).max() + 1e-12)
                 )
-            assert err < 1e-3, (name, combo, err)
+                costs = sess.costs(batch=b)
+                costs.pop("batch")  # the row carries it as an int already
+                us_per_rhs = us / b
+                row = dict(
+                    matrix=name, combo=combo, units=topo.units, batch=b,
+                    us_per_call=us, us_per_rhs=us_per_rhs,
+                    seq_us_per_rhs=seq_us_per_rhs,
+                    speedup_per_rhs=seq_us_per_rhs / us_per_rhs,
+                    rel_err=err, **costs,
+                )
+                rows.append(row)
+                if print_rows:
+                    print(
+                        f"{name},{combo},{topo.units},{b},"
+                        f"{costs['lb_tiles']:.3f},"
+                        f"{costs['flop_efficiency']:.3f},"
+                        f"{costs['scatter_bytes_per_rhs']:.2e},"
+                        f"{costs['scatter_bytes_naive']:.2e},"
+                        f"{costs['gather_bytes']:.2e},{us:.0f},"
+                        f"{us_per_rhs:.0f},{seq_us_per_rhs:.0f},"
+                        f"{seq_us_per_rhs / us_per_rhs:.2f},{err:.1e}"
+                    )
+                assert err < 1e-3, (name, combo, b, err)
+    summary = {}
+    for b in batch_sizes:
+        sp = [r["speedup_per_rhs"] for r in rows if r["batch"] == b]
+        if sp:
+            summary[f"speedup_per_rhs_geomean_b{b}"] = float(
+                np.exp(np.mean(np.log(sp)))
+            )
+    if print_rows:
+        for key, v in summary.items():
+            print(f"# {key}={v:.2f}")
+    if json_path:
+        payload = {
+            "bench": "pmvc",
+            "topology": {"nodes": f, "cores": cores},
+            "exchange": exchange,
+            "block": bm,
+            "timing_iters": iters,
+            "summary": summary,
+            "rows": rows,
+        }
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        if print_rows:
+            print(f"# wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(json_path="BENCH_pmvc.json")

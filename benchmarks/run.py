@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV blocks:
   1. Partition quality        (paper Tables 4.3–4.6 + Table 4.7 synthesis)
-  2. PMVC phase decomposition (paper Figures 4.16–4.55)
+  2. PMVC phase decomposition (paper Figures 4.16–4.55), batch-swept
   3. Kernel micro             (spBLAS level-2 analogue)
   4. Roofline table           (§Roofline, from dry-run artifacts)
+
+Section 2 also writes ``BENCH_pmvc.json`` at the repo root (per-cell
+timings + phase costs) so the perf trajectory is tracked across PRs.
 """
+from pathlib import Path
+
 from benchmarks import bench_kernels, bench_partition, bench_pmvc, bench_roofline
 
 
@@ -17,7 +22,7 @@ def main() -> None:
         print(f"{combo}," + ",".join(f"{k}={v:.2f}" for k, v in w.items()))
 
     print("\n# === 2. PMVC phase decomposition (Figures 4.16-4.55) ===")
-    bench_pmvc.run()
+    bench_pmvc.run(json_path=str(Path(__file__).resolve().parent.parent / "BENCH_pmvc.json"))
 
     print("\n# === 3. kernel micro ===")
     bench_kernels.run()

@@ -59,8 +59,43 @@ class SparseSession:
         return self._spmv_cache[name]
 
     def spmv(self, x: np.ndarray, *, executor: Optional[str] = None) -> np.ndarray:
-        """y = A @ x through the session's (or the named) executor."""
+        """y = A @ x through the session's (or the named) executor.
+
+        ``x`` may be one vector ``[N]`` (returns ``[N]``) or a batch of
+        right-hand sides ``[B, N]`` (returns ``[B, N]``): the batch runs
+        as one SpMM — a single exchange carries all B vectors, so the
+        scatter/gather phases amortize over the batch.
+        """
         return self._executor_fn(executor or self.executor)(x)
+
+    def device_spmm(self) -> "SpmvFn":
+        """A pure-JAX ``x -> A @ x`` closure over device-resident plan
+        arrays (``[N]`` or ``[B, N]``, same leading shape out).
+
+        Traceable — usable inside ``jax.lax.fori_loop`` / ``while_loop``
+        bodies, which is what the solvers' ``device_loop=True`` fast
+        path does. Uses the vmap-over-units formulation (the ``simulate``
+        executor's math) honoring the session's exchange strategy.
+        """
+        import jax.numpy as jnp
+
+        from repro.pmvc.dist import make_simulate_fn
+
+        dp = self.device_plan
+        run = make_simulate_fn(dp, self.selective)
+        n, m = dp.shape
+        ncb, bn = dp.num_col_blocks, dp.bn
+
+        def mv(x):
+            squeeze = x.ndim == 1
+            x2 = x[None] if squeeze else x
+            b = x2.shape[0]
+            xp = jnp.zeros((b, ncb * bn), jnp.float32).at[:, :m].set(x2)
+            xb = jnp.moveaxis(xp.reshape(b, ncb, bn), 0, -1)
+            y = run(xb).reshape(-1, b).T[:, :n]
+            return y[0] if squeeze else y
+
+        return mv
 
     def solve(self, solver: str = "power_iteration", **kw) -> SolveResult:
         """Run a registered iterative solver (``iters=``, ``tol=``, ...)."""
@@ -72,10 +107,12 @@ class SparseSession:
     def combo(self) -> str:
         return self.partition.name
 
-    def costs(self, bytes_per: int = 4) -> Dict[str, float]:
+    def costs(self, bytes_per: int = 4, batch: int = 1) -> Dict[str, float]:
         """Partition quality + realized per-phase volumes, one dict: the
         paper's measurement columns (LB, FD, cut, scatter/gather bytes,
-        FLOP efficiency)."""
+        FLOP efficiency). ``batch`` is the SpMM width B — payload scales
+        with B while per-message overhead amortizes, so the
+        ``*_per_rhs`` keys shrink as B grows."""
         out: Dict[str, float] = {
             "lb_nodes": self.partition.lb_nodes,
             "lb_cores": self.partition.lb_cores,
@@ -83,7 +120,11 @@ class SparseSession:
             "inter_fd": float(self.partition.inter_fd),
             "hyper_cut": float(self.partition.hyper_cut),
         }
-        out.update(phase_costs(self.device_plan, self.selective, bytes_per=bytes_per))
+        out.update(
+            phase_costs(
+                self.device_plan, self.selective, bytes_per=bytes_per, batch=batch
+            )
+        )
         return out
 
     # -- cheap re-configuration (planning artifacts shared) ----------------

@@ -8,12 +8,27 @@ unchanged on every (partitioner × exchange × executor) cell. New
 scenarios land as registry entries via :func:`register_solver`, not as
 new scripts.
 
-Built-ins: ``"power_iteration"``, ``"jacobi"``, ``"pagerank"``, ``"cg"``.
+Two axes of scale on top of the basic drivers:
+
+* **Batching** — ``block_power_iteration`` (QR re-orthonormalized
+  subspace iteration), multi-source ``pagerank`` (``seeds=[B, N]``, one
+  personalization vector per user), and ``jacobi`` with ``b=[B, N]``
+  drive B right-hand sides through one SpMM per iteration: one exchange
+  carries the whole batch, amortizing the scatter/gather phases the
+  paper measures in ch.4.
+* **Device-resident loops** — ``device_loop=True`` (on
+  ``power_iteration``, ``block_power_iteration``, ``pagerank``,
+  ``jacobi``) runs the entire iteration under ``jax.lax.while_loop``
+  via :meth:`SparseSession.device_spmm`, so steady-state solves never
+  bounce through the host between iterations.
+
+Built-ins: ``"power_iteration"``, ``"block_power_iteration"``,
+``"jacobi"``, ``"pagerank"``, ``"cg"``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, List, Optional
+from typing import TYPE_CHECKING, Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,7 +50,9 @@ class SolveResult:
     ``value`` is the solver's scalar headline (dominant eigenvalue for
     power iteration, final residual norm otherwise); ``residuals`` is
     one entry per iteration (solver-specific metric, documented on each
-    driver).
+    driver). Batched drivers return ``x`` with shape ``[B, N]`` and
+    reduce the per-iteration metric over the batch (max — the slowest
+    right-hand side governs convergence).
     """
 
     solver: str
@@ -55,13 +72,92 @@ def _diag_of(session: "SparseSession") -> np.ndarray:
     return d
 
 
+def _device_solver_loop(
+    iterate: Callable, carry0, iters: int, tol: float
+) -> Tuple[int, bool, np.ndarray, tuple]:
+    """Run ``carry, res = iterate(carry)`` under ``lax.while_loop`` with
+    tol early-stop, entirely on device.
+
+    Returns ``(iters_run, converged, residuals[:iters_run], carry)`` —
+    the same early-stop semantics as the host loops (stop *after* the
+    first iteration whose residual drops below ``tol``; ``tol=0`` runs
+    all ``iters``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    check_tol = tol > 0.0  # static: baked into the traced body
+
+    def cond(state):
+        k, done = state[0], state[1]
+        return (k < iters) & jnp.logical_not(done)
+
+    def body(state):
+        k, _, res, carry = state
+        carry, r = iterate(carry)
+        res = res.at[k].set(r)
+        done = (r < tol) if check_tol else jnp.asarray(False)
+        return (k + 1, done, res, carry)
+
+    state0 = (
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(False),
+        jnp.zeros((max(iters, 1),), jnp.float32),
+        carry0,
+    )
+    k, done, res, carry = jax.lax.while_loop(cond, body, state0)
+    k = int(k)
+    return k, bool(done), np.asarray(res)[:k], carry
+
+
+def _result(
+    solver: str,
+    x,
+    value: float,
+    residuals,
+    iters_run: int,
+    converged: bool,
+) -> SolveResult:
+    return SolveResult(
+        solver=solver,
+        x=np.asarray(x, np.float32),
+        value=float(value),
+        residuals=[float(r) for r in residuals],
+        iters_run=iters_run,
+        converged=converged,
+    )
+
+
 @register_solver("power_iteration")
 def power_iteration(
-    session: "SparseSession", *, iters: int = 50, tol: float = 0.0
+    session: "SparseSession",
+    *,
+    iters: int = 50,
+    tol: float = 0.0,
+    device_loop: bool = False,
 ) -> SolveResult:
     """x ← Ax / ‖Ax‖; residual per iter = |λ_k − λ_{k−1}|."""
     n = session.matrix.shape[1]
-    x = np.ones(n, np.float32) / np.sqrt(n)
+    x0 = np.ones(n, np.float32) / np.sqrt(n)
+
+    if device_loop:
+        import jax.numpy as jnp
+
+        mv = session.device_spmm()
+
+        def iterate(carry):
+            x, lam_prev = carry
+            y = mv(x)
+            lam = jnp.linalg.norm(y)
+            x = y / jnp.maximum(lam, 1e-30)
+            return (x, lam), jnp.abs(lam - lam_prev)
+
+        k, conv, res, (x, lam) = _device_solver_loop(
+            iterate, (jnp.asarray(x0), jnp.asarray(0.0, jnp.float32)), iters, tol
+        )
+        return _result("power_iteration", x, float(lam), res, k, conv)
+
+    x = x0
     lam_prev, lam = 0.0, 0.0
     residuals: List[float] = []
     k = 0
@@ -73,13 +169,83 @@ def power_iteration(
         lam_prev = lam
         if tol and residuals[-1] < tol:
             break
-    return SolveResult(
-        solver="power_iteration",
-        x=x,
-        value=lam,
-        residuals=residuals,
-        iters_run=k,
-        converged=bool(tol and residuals and residuals[-1] < tol),
+    return _result(
+        "power_iteration",
+        x,
+        lam,
+        residuals,
+        k,
+        bool(tol and residuals and residuals[-1] < tol),
+    )
+
+
+@register_solver("block_power_iteration")
+def block_power_iteration(
+    session: "SparseSession",
+    *,
+    iters: int = 50,
+    tol: float = 0.0,
+    block: int = 8,
+    seed: int = 0,
+    device_loop: bool = False,
+) -> SolveResult:
+    """Subspace iteration on B vectors: X ← qr(A Xᵀ) re-orthonormalized
+    every step; one SpMM per iteration drives the whole block.
+
+    Ritz-value estimates are |diag R|; residual per iter is the max
+    change over the block; ``value`` is the dominant-eigenvalue
+    estimate; ``x`` is the ``[B, N]`` orthonormal basis (rows). With
+    ``block=1`` this reduces exactly to ``power_iteration`` (same init,
+    λ = ‖Ax‖).
+    """
+    n = session.matrix.shape[1]
+    b = int(block)
+    if not 1 <= b <= n:
+        raise ValueError(f"block must be in [1, N={n}], got {b}")
+    x0 = np.random.default_rng(seed).standard_normal((b, n)).astype(np.float32)
+    x0[0] = 1.0 / np.sqrt(n)  # block=1 ≡ power_iteration's init
+    q0, _ = np.linalg.qr(x0.T)  # orthonormal start
+    x0 = np.ascontiguousarray(q0.T, dtype=np.float32)
+
+    if device_loop:
+        import jax.numpy as jnp
+
+        mv = session.device_spmm()
+
+        def iterate(carry):
+            x, lam_prev = carry
+            q, r = jnp.linalg.qr(mv(x).T)
+            lam = jnp.abs(jnp.diagonal(r))
+            return (q.T, lam), jnp.max(jnp.abs(lam - lam_prev))
+
+        k, conv, res, (x, lam) = _device_solver_loop(
+            iterate, (jnp.asarray(x0), jnp.zeros((b,), jnp.float32)), iters, tol
+        )
+        return _result(
+            "block_power_iteration", x, float(np.max(np.asarray(lam))), res, k, conv
+        )
+
+    x = x0
+    lam_prev = np.zeros(b)
+    lam = lam_prev
+    residuals: List[float] = []
+    k = 0
+    for k in range(1, iters + 1):
+        y = session.spmv(x)  # [B, N] — one SpMM for the whole block
+        q, r = np.linalg.qr(y.T)
+        lam = np.abs(np.diagonal(r))
+        x = np.ascontiguousarray(q.T, dtype=np.float32)
+        residuals.append(float(np.max(np.abs(lam - lam_prev))))
+        lam_prev = lam
+        if tol and residuals[-1] < tol:
+            break
+    return _result(
+        "block_power_iteration",
+        x,
+        float(np.max(lam)),
+        residuals,
+        k,
+        bool(tol and residuals and residuals[-1] < tol),
     )
 
 
@@ -90,30 +256,61 @@ def jacobi(
     iters: int = 50,
     tol: float = 0.0,
     b: Optional[np.ndarray] = None,
+    device_loop: bool = False,
 ) -> SolveResult:
-    """Solve A z = b with z ← z + D⁻¹(b − Az); residual = ‖b − Az‖₂."""
+    """Solve A z = b with z ← z + D⁻¹(b − Az); residual = ‖b − Az‖₂.
+
+    ``b`` may be one right-hand side ``[N]`` or a batch ``[B, N]`` — the
+    batch is swept by one SpMM per iteration and the residual is the max
+    2-norm over the batch.
+    """
     n = session.matrix.shape[0]
     d = _diag_of(session)
     if np.any(d == 0.0):
         raise ValueError("jacobi needs a zero-free diagonal")
     bv = np.ones(n, np.float32) if b is None else np.asarray(b, np.float32)
-    z = np.zeros(n, np.float32)
+    batched = bv.ndim == 2
+
+    if device_loop:
+        import jax.numpy as jnp
+
+        mv = session.device_spmm()
+        bd = jnp.asarray(bv)
+        dd = jnp.asarray(d, jnp.float32)
+
+        def iterate(carry):
+            z, r = carry  # r = b − Az carried forward: one SpMM per iter
+            z = z + r / dd
+            r = bd - mv(z)
+            rn = jnp.linalg.norm(r, axis=-1)
+            return (z, r), (jnp.max(rn) if batched else rn)
+
+        z0 = jnp.zeros_like(bd)
+        k, conv, res, (z, _) = _device_solver_loop(
+            iterate, (z0, bd - mv(z0)), iters, tol
+        )
+        return _result(
+            "jacobi", z, res[-1] if len(res) else 0.0, res, k, conv
+        )
+
+    z = np.zeros_like(bv)
     r = bv - session.spmv(z)
     residuals: List[float] = []
     k = 0
     for k in range(1, iters + 1):
         z = (z + r / d).astype(np.float32)
         r = bv - session.spmv(z)
-        residuals.append(float(np.linalg.norm(r)))
+        rn = np.linalg.norm(r, axis=-1)
+        residuals.append(float(rn.max() if batched else rn))
         if tol and residuals[-1] < tol:
             break
-    return SolveResult(
-        solver="jacobi",
-        x=z,
-        value=residuals[-1] if residuals else 0.0,
-        residuals=residuals,
-        iters_run=k,
-        converged=bool(tol and residuals and residuals[-1] < tol),
+    return _result(
+        "jacobi",
+        z,
+        residuals[-1] if residuals else 0.0,
+        residuals,
+        k,
+        bool(tol and residuals and residuals[-1] < tol),
     )
 
 
@@ -124,28 +321,70 @@ def pagerank(
     iters: int = 50,
     tol: float = 0.0,
     damping: float = 0.85,
+    seeds: Optional[np.ndarray] = None,
+    device_loop: bool = False,
 ) -> SolveResult:
-    """r ← d·Ar + (1−d)/n on the session's link matrix (assumed
-    column-normalized, ch.1 §3.1); residual = ‖r_k − r_{k−1}‖₁."""
+    """r ← d·Ar + (1−d)·s on the session's link matrix (assumed
+    column-normalized, ch.1 §3.1); residual = ‖r_k − r_{k−1}‖₁.
+
+    ``seeds=None`` is classic PageRank (uniform teleport s = 1/n).
+    ``seeds=[B, N]`` is multi-source *personalized* PageRank — one
+    teleport distribution per user, all B walks advanced by a single
+    SpMM per iteration (the multi-user serving path); the residual is
+    the max 1-norm change over the batch.
+    """
     n = session.matrix.shape[1]
-    r = np.full(n, 1.0 / n, np.float32)
+    if seeds is None:
+        s = np.full(n, 1.0 / n, np.float32)
+    else:
+        s = np.asarray(seeds, np.float32)
+        mass = np.abs(s).sum(axis=-1, keepdims=True)
+        if np.any(mass == 0.0):
+            raise ValueError("each seed row needs non-zero mass")
+        s = s / mass  # teleport distributions: rows sum to 1
+    batched = s.ndim == 2
+    r0 = s.copy()
+
+    if device_loop:
+        import jax.numpy as jnp
+
+        mv = session.device_spmm()
+        sd = jnp.asarray(s)
+
+        def iterate(carry):
+            (r,) = carry
+            r_new = damping * mv(r) + (1.0 - damping) * sd
+            norm = jnp.sum(jnp.abs(r_new), axis=-1, keepdims=True)
+            r_new = r_new / jnp.maximum(norm, 1e-30)
+            diff = jnp.sum(jnp.abs(r_new - r), axis=-1)
+            return (r_new,), (jnp.max(diff) if batched else diff)
+
+        k, conv, res, (r,) = _device_solver_loop(
+            iterate, (jnp.asarray(r0),), iters, tol
+        )
+        return _result(
+            "pagerank", r, res[-1] if len(res) else 0.0, res, k, conv
+        )
+
+    r = r0
     residuals: List[float] = []
     k = 0
     for k in range(1, iters + 1):
-        r_new = damping * session.spmv(r) + (1.0 - damping) / n
-        s = float(np.abs(r_new).sum())
-        r_new = (r_new / max(s, 1e-30)).astype(np.float32)
-        residuals.append(float(np.abs(r_new - r).sum()))
+        r_new = damping * session.spmv(r) + (1.0 - damping) * s
+        norm = np.abs(r_new).sum(axis=-1, keepdims=True)
+        r_new = (r_new / np.maximum(norm, 1e-30)).astype(np.float32)
+        diff = np.abs(r_new - r).sum(axis=-1)
+        residuals.append(float(diff.max() if batched else diff))
         r = r_new
         if tol and residuals[-1] < tol:
             break
-    return SolveResult(
-        solver="pagerank",
-        x=r,
-        value=residuals[-1] if residuals else 0.0,
-        residuals=residuals,
-        iters_run=k,
-        converged=bool(tol and residuals and residuals[-1] < tol),
+    return _result(
+        "pagerank",
+        r,
+        residuals[-1] if residuals else 0.0,
+        residuals,
+        k,
+        bool(tol and residuals and residuals[-1] < tol),
     )
 
 
@@ -158,7 +397,8 @@ def conjugate_gradient(
     b: Optional[np.ndarray] = None,
 ) -> SolveResult:
     """Conjugate gradient for SPD A (the suite's SPD matrices);
-    residual = ‖b − Az‖₂."""
+    residual = ‖b − Az‖₂. Stops without ``converged`` on the breakdown
+    branch (search-direction curvature ``pᵀAp ≈ 0``)."""
     n = session.matrix.shape[0]
     bv = np.ones(n, np.float32) if b is None else np.asarray(b, np.float32)
     z = np.zeros(n, np.float32)
@@ -181,11 +421,11 @@ def conjugate_gradient(
             break
         p = (r + (rs_new / max(rs, 1e-30)) * p).astype(np.float32)
         rs = rs_new
-    return SolveResult(
-        solver="cg",
-        x=z,
-        value=residuals[-1],
-        residuals=residuals,
-        iters_run=k,
-        converged=bool(tol and residuals[-1] < tol),
+    return _result(
+        "cg",
+        z,
+        residuals[-1],
+        residuals,
+        k,
+        bool(tol and residuals[-1] < tol),
     )

@@ -32,7 +32,7 @@ _SEP = "/"
 
 def jnp_astype(arr: np.ndarray, dtype) -> np.ndarray:
     """Cast via ml_dtypes-aware numpy (handles bf16 targets)."""
-    import ml_dtypes  # registered by jax
+    import ml_dtypes  # noqa: F401 — registers bf16 et al. with numpy
 
     return arr.astype(np.dtype(dtype))
 

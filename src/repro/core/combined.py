@@ -17,7 +17,7 @@ volumes) derive from that element-level assignment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

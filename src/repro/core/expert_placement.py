@@ -20,7 +20,6 @@ weights so device r owns experts ``perm[r*E_loc:(r+1)*E_loc]``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import numpy as np
 

@@ -1,5 +1,21 @@
-from repro.kernels.spmv.ops import spmv_shard, spmv_shard_ref, pack_inputs
-from repro.kernels.spmv.kernel import bell_spmv
-from repro.kernels.spmv.ref import bell_spmv_ref
+from repro.kernels.spmv.ops import (
+    pack_inputs,
+    spmm_shard,
+    spmm_shard_ref,
+    spmv_shard,
+    spmv_shard_ref,
+)
+from repro.kernels.spmv.kernel import bell_spmm, bell_spmv
+from repro.kernels.spmv.ref import bell_spmm_ref, bell_spmv_ref
 
-__all__ = ["spmv_shard", "spmv_shard_ref", "pack_inputs", "bell_spmv", "bell_spmv_ref"]
+__all__ = [
+    "spmv_shard",
+    "spmm_shard",
+    "spmv_shard_ref",
+    "spmm_shard_ref",
+    "pack_inputs",
+    "bell_spmv",
+    "bell_spmm",
+    "bell_spmv_ref",
+    "bell_spmm_ref",
+]

@@ -1,8 +1,9 @@
-"""Jitted public entry points for the BELL SpMV kernel.
+"""Jitted public entry points for the BELL SpMM/SpMV kernel.
 
-``spmv_shard`` runs the Pallas kernel (interpret-mode on CPU, compiled on
-TPU); ``pack_inputs`` converts a host-side :class:`repro.sparse.bell
-.BellShard` into device arrays.
+``spmv_shard`` / ``spmm_shard`` run the Pallas kernel (interpret-mode on
+CPU, compiled on TPU); ``pack_inputs`` converts a host-side
+:class:`repro.sparse.bell.BellShard` plus a single ``[N]`` vector or a
+``[B, N]`` batch into device arrays.
 """
 from __future__ import annotations
 
@@ -13,10 +14,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sparse.bell import BellShard, pad_x_blocks
-from repro.kernels.spmv.kernel import bell_spmv
-from repro.kernels.spmv.ref import bell_spmv_ref
+from repro.kernels.spmv.kernel import bell_spmm, bell_spmv
+from repro.kernels.spmv.ref import bell_spmm_ref, bell_spmv_ref
 
-__all__ = ["spmv_shard", "pack_inputs", "spmv_shard_ref"]
+__all__ = [
+    "spmv_shard",
+    "spmm_shard",
+    "pack_inputs",
+    "spmv_shard_ref",
+    "spmm_shard_ref",
+]
 
 
 def _on_tpu() -> bool:
@@ -26,7 +33,10 @@ def _on_tpu() -> bool:
 def pack_inputs(
     shard: BellShard, x: np.ndarray, bn: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    ncb = -(-x.shape[0] // bn)
+    """Device arrays for one shard. ``x`` may be ``[N]`` (x blocks come
+    back ``[NCB, bn]``) or a batch ``[B, N]`` (``[NCB, bn, B]``)."""
+    n = x.shape[-1]
+    ncb = -(-n // bn)
     return (
         jnp.asarray(shard.tiles),
         jnp.asarray(shard.tile_row),
@@ -52,6 +62,23 @@ def spmv_shard(
     )
 
 
+def spmm_shard(
+    tiles: jax.Array,
+    tile_row: jax.Array,
+    tile_col: jax.Array,
+    x_blocks: jax.Array,  # [NCB, bn, B]
+    num_row_blocks: int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One shard's batched PMVC: returns the local y block ``[R, bm, B]``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bell_spmm(
+        tiles, tile_row, tile_col, x_blocks, num_row_blocks, interpret=interpret
+    )
+
+
 def spmv_shard_ref(
     tiles: jax.Array,
     tile_row: jax.Array,
@@ -60,3 +87,13 @@ def spmv_shard_ref(
     num_row_blocks: int,
 ) -> jax.Array:
     return bell_spmv_ref(tiles, tile_row, tile_col, x_blocks, num_row_blocks)
+
+
+def spmm_shard_ref(
+    tiles: jax.Array,
+    tile_row: jax.Array,
+    tile_col: jax.Array,
+    x_blocks: jax.Array,
+    num_row_blocks: int,
+) -> jax.Array:
+    return bell_spmm_ref(tiles, tile_row, tile_col, x_blocks, num_row_blocks)

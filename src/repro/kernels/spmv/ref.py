@@ -1,10 +1,28 @@
-"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+"""Pure-jnp oracle for the Block-ELL SpMM kernel."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bell_spmv_ref"]
+__all__ = ["bell_spmv_ref", "bell_spmm_ref"]
+
+
+def bell_spmm_ref(
+    tiles: jax.Array,  # [T, bm, bn]
+    tile_row: jax.Array,  # [T]
+    tile_col: jax.Array,  # [T]
+    x_blocks: jax.Array,  # [NCB, bn, B] stacked x's in blocks
+    num_row_blocks: int,
+) -> jax.Array:
+    """y[r] = Σ_{t: tile_row[t]==r} tiles[t] @ x_blocks[tile_col[t]]."""
+    xb = x_blocks[tile_col]  # [T, bn, B]
+    contribs = jnp.einsum(
+        "tmn,tnb->tmb", tiles.astype(jnp.float32), xb.astype(jnp.float32)
+    )
+    y = jnp.zeros(
+        (num_row_blocks, tiles.shape[1], x_blocks.shape[-1]), jnp.float32
+    )
+    return y.at[tile_row].add(contribs)
 
 
 def bell_spmv_ref(
@@ -14,10 +32,7 @@ def bell_spmv_ref(
     x_blocks: jax.Array,  # [NCB, bn]
     num_row_blocks: int,
 ) -> jax.Array:
-    """y[r] = Σ_{t: tile_row[t]==r} tiles[t] @ x_blocks[tile_col[t]]."""
-    xb = x_blocks[tile_col]  # [T, bn]
-    contribs = jnp.einsum(
-        "tmn,tn->tm", tiles.astype(jnp.float32), xb.astype(jnp.float32)
-    )
-    y = jnp.zeros((num_row_blocks, tiles.shape[1]), jnp.float32)
-    return y.at[tile_row].add(contribs)
+    """Single-vector (B = 1) view of :func:`bell_spmm_ref`."""
+    return bell_spmm_ref(
+        tiles, tile_row, tile_col, x_blocks[..., None], num_row_blocks
+    )[..., 0]

@@ -8,7 +8,7 @@ optimizer-state leaves.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -9,10 +9,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.config import ArchConfig
 from repro.models import encdec as encdec_mod

@@ -7,14 +7,14 @@ self-attn KV cache plus the (static) encoder memory.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ArchConfig
 from repro.models import attention as attn_mod
-from repro.models.common import Params, dense_init, embed_init, rms_norm
+from repro.models.common import Params, embed_init, rms_norm
 from repro.models.transformer import _dtype, init_mlp, mlp, padded_vocab
 
 __all__ = [

@@ -13,8 +13,6 @@ Families:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

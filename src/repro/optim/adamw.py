@@ -7,7 +7,6 @@ optimizer state like the params, plus over the data axis where free".
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Tuple
 
 import jax

@@ -7,20 +7,29 @@ Phases mirror ch.4's measurement decomposition:
   total``, all-gather) or moved by the **selective exchange** — a static
   all_to_all schedule carrying only the C_Xk blocks each unit needs
   (:class:`repro.pmvc.plan_device.SelectivePlan`).
-* **Compute**: per-unit Block-ELL SpMV (Pallas kernel on TPU, jnp oracle
+* **Compute**: per-unit Block-ELL SpMM (Pallas kernel on TPU, jnp oracle
   elsewhere).
 * **Gather + construction of Y**: partial y vectors summed across units
   (column fragments overlap rows — the paper's fan-in with accumulation)
   via ``psum``; row-clean plans could concat instead (cheaper — the
   difference is visible in the collective roofline term).
 
-Two entry points: ``pmvc_simulate`` (vmap over a stacked unit axis — CPU
-tests and the paper-reproduction benchmarks) and ``make_pmvc_step``
+Everything is **batch-first**: x may be one vector ``[N]`` or a stack
+``[B, N]``; block-padded x carries the batch as a trailing axis
+(``[NCB, bn, B]``) so each tile contribution is a ``(bm × bn) @
+(bn × B)`` matmul and one exchange moves all B right-hand sides — the
+paper's scatter/gather volumes amortize over the batch
+(:func:`phase_costs` with ``batch=``).
+
+Entry points: ``pmvc_simulate`` / ``pmvc_simulate_selective`` (vmap over
+a stacked unit axis — CPU tests and the paper-reproduction benchmarks),
+``make_simulate_fn`` (the same math as a reusable — optionally jitted —
+device closure over hoisted plan arrays; what the ``simulate`` executor
+and the device-resident solver loops build on), and ``make_pmvc_step``
 (shard_map over a device mesh — the production path and dry-run).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -39,12 +48,21 @@ from repro.sparse.bell import pad_x_blocks
 __all__ = [
     "pmvc_simulate",
     "pmvc_simulate_selective",
+    "make_simulate_fn",
     "make_pmvc_step",
     "make_unit_mesh",
     "phase_costs",
+    "unblock_y",
     "pad_x",
     "scatter_x_owned",
+    "MESSAGE_OVERHEAD_BYTES",
 ]
+
+# α term of the exchange cost model: fixed per-message overhead (header +
+# rendezvous), in byte-equivalents at the link's β. Amortized over the
+# batch — the reason bytes-per-RHS shrinks as B grows (ch.4's
+# startup-vs-payload decomposition).
+MESSAGE_OVERHEAD_BYTES = 512
 
 
 def pad_x(x: np.ndarray, ncb: int, bn: int) -> np.ndarray:
@@ -52,73 +70,135 @@ def pad_x(x: np.ndarray, ncb: int, bn: int) -> np.ndarray:
     return pad_x_blocks(x, ncb, bn)
 
 
+def unblock_y(y, n: int) -> np.ndarray:
+    """Undo the block layout: ``[NRB, bm] -> [n]`` or ``[NRB, bm, B] ->
+    [B, n]`` (row-major batch, matching the ``[B, N]`` input layout)."""
+    if y.ndim == 2:
+        return np.asarray(y).reshape(-1)[:n]
+    b = y.shape[-1]
+    return np.asarray(y).reshape(-1, b).T[:, :n]
+
+
 def scatter_x_owned(sp: SelectivePlan, xb: np.ndarray) -> np.ndarray:
     """Place padded x blocks into the block-col-sharded ``[U, per, bn]``
-    layout the selective executors start from (unit u owns ``owned[u]``)."""
-    x_owned = np.zeros((sp.num_units, sp.blocks_per_unit, xb.shape[1]), np.float32)
+    (or ``[U, per, bn, B]``) layout the selective executors start from
+    (unit u owns ``owned[u]``)."""
+    x_owned = np.zeros(
+        (sp.num_units, sp.blocks_per_unit) + xb.shape[1:], np.float32
+    )
     valid = sp.owned >= 0
     x_owned[valid] = xb[sp.owned[valid]]
     return x_owned
 
 
-def _unit_spmv(tiles: jax.Array, tile_row: jax.Array, xb_of_tile: jax.Array, nrb: int) -> jax.Array:
-    """One unit's padded-tile SpMV into a full-length partial y.
+def _unit_spmm(
+    tiles: jax.Array, tile_row: jax.Array, xb_of_tile: jax.Array, nrb: int
+) -> jax.Array:
+    """One unit's padded-tile SpMM into a full-length partial y.
 
+    ``xb_of_tile`` is ``[T, bn]`` (single vector) or ``[T, bn, B]``;
     jnp formulation (oracle-equivalent); the Pallas kernel is used by the
     per-shard benchmark path where the unit loop is explicit."""
-    contribs = jnp.einsum("tmn,tn->tm", tiles, xb_of_tile)  # [T, bm]
-    y = jnp.zeros((nrb, tiles.shape[1]), jnp.float32)
+    if xb_of_tile.ndim == 2:
+        contribs = jnp.einsum("tmn,tn->tm", tiles, xb_of_tile)  # [T, bm]
+        y = jnp.zeros((nrb, tiles.shape[1]), jnp.float32)
+        return y.at[tile_row].add(contribs)
+    if jax.default_backend() == "cpu":
+        # Batched contraction unrolled over bn as broadcast outer products:
+        # XLA CPU fuses the chain into one vectorized loop with the batch
+        # axis innermost (~3× faster than its tiny-batched-GEMM path for
+        # einsum "tmn,tnb->tmb").
+        bn = tiles.shape[-1]
+        contribs = sum(
+            tiles[..., n, None] * xb_of_tile[..., None, n, :] for n in range(bn)
+        )  # [T, bm, B]
+    else:
+        # Accelerators get the real batched matmul (MXU/tensor cores).
+        contribs = jnp.einsum("tmn,tnb->tmb", tiles, xb_of_tile)
+    y = jnp.zeros((nrb, tiles.shape[1], xb_of_tile.shape[-1]), jnp.float32)
     return y.at[tile_row].add(contribs)
 
 
+def make_simulate_fn(
+    plan: DevicePlan,
+    selective: Optional[SelectivePlan] = None,
+    *,
+    jit: bool = False,
+) -> Callable[[jax.Array], jax.Array]:
+    """Build ``run(xb) -> y_blocks``, the vmap-over-units PMVC on padded
+    x blocks (``[NCB, bn]`` or ``[NCB, bn, B]`` → ``[NRB, bm(, B)]``).
+
+    Plan arrays are hoisted to device once, here — callers that keep the
+    closure (the ``simulate`` executor, the ``device_loop`` solver fast
+    path) never re-pay host→device conversion per call. The closure is
+    pure JAX, so it can be jitted (``jit=True``) and traced inside
+    ``lax.fori_loop`` / ``while_loop`` solver bodies.
+    """
+    nrb = plan.num_row_blocks
+    tiles = jnp.asarray(plan.tiles)
+    tile_row = jnp.asarray(plan.tile_row)
+
+    if selective is None:
+        tile_col = jnp.asarray(plan.tile_col)
+
+        def run(xb: jax.Array) -> jax.Array:
+            def one_unit(t, r, c):
+                return _unit_spmm(t, r, xb[c], nrb)
+
+            partials = jax.vmap(one_unit)(tiles, tile_row, tile_col)
+            return partials.sum(axis=0)
+
+        return jax.jit(run) if jit else run
+
+    sp = selective
+    tile_col_local = jnp.asarray(sp.tile_col_local)
+    owned = jnp.asarray(sp.owned)  # [U, per]
+    send_idx = jnp.asarray(sp.send_idx)  # [U, U, L]
+    recv_src = jnp.asarray(sp.recv_src)
+    recv_lane = jnp.asarray(sp.recv_lane)
+    units = jnp.arange(sp.num_units)
+
+    def run_selective(xb: jax.Array) -> jax.Array:
+        # Device-side ownership scatter (x block-col-sharded per unit).
+        omask = (owned >= 0).reshape(owned.shape + (1,) * (xb.ndim - 1))
+        x_owned = jnp.where(omask, xb[jnp.maximum(owned, 0)], 0.0)
+        # Emulated static all_to_all: recv[u, v, l] = send[v, u, l] — the
+        # exact workspace-gather path of the shard_map executor (send_idx
+        # routes, compact tile_col_local indexing), testable without a
+        # multi-device mesh.
+        smask = (send_idx >= 0).reshape(send_idx.shape + (1,) * (xb.ndim - 1))
+        safe = jnp.maximum(send_idx, 0)
+        send = jnp.where(
+            smask, x_owned[units[:, None, None], safe], 0.0
+        )  # [U(src), U(dst), L, bn(, B)]
+        recv = jnp.swapaxes(send, 0, 1)  # [U(dst), U(src), L, bn(, B)]
+
+        def one_unit(t, r, tcl, recv_u, src, lane):
+            ws = recv_u[src, lane]  # [W, bn(, B)] compact workspace
+            return _unit_spmm(t, r, ws[tcl], nrb)
+
+        partials = jax.vmap(one_unit)(
+            tiles, tile_row, tile_col_local, recv, recv_src, recv_lane
+        )
+        return partials.sum(axis=0)
+
+    return jax.jit(run_selective) if jit else run_selective
+
+
 def pmvc_simulate(plan: DevicePlan, x: np.ndarray) -> np.ndarray:
-    """vmap-over-units execution on a single host; returns y [N]."""
-    nrb, ncb = plan.num_row_blocks, plan.num_col_blocks
-    xb = jnp.asarray(pad_x(x, ncb, plan.bn))
-
-    def one_unit(tiles, tile_row, tile_col):
-        return _unit_spmv(tiles, tile_row, xb[tile_col], nrb)
-
-    partials = jax.vmap(one_unit)(
-        jnp.asarray(plan.tiles), jnp.asarray(plan.tile_row), jnp.asarray(plan.tile_col)
-    )  # [U, NRB, bm]
-    y = partials.sum(axis=0).reshape(-1)
-    return np.asarray(y)[: plan.shape[0]]
+    """vmap-over-units execution on a single host; ``x`` is ``[N]`` or a
+    batch ``[B, N]``; returns y with the same leading shape."""
+    xb = jnp.asarray(pad_x(np.asarray(x, np.float32), plan.num_col_blocks, plan.bn))
+    return unblock_y(make_simulate_fn(plan)(xb), plan.shape[0])
 
 
 def pmvc_simulate_selective(
     plan: DevicePlan, sp: SelectivePlan, x: np.ndarray
 ) -> np.ndarray:
-    """vmap execution of the *selective* exchange on a single host.
-
-    Emulates the static all_to_all (``recv[u, v, l] = send[v, u, l]``)
-    so the exact workspace-gather path of the shard_map executor — x
-    block-col-sharded, ``send_idx`` routes, compact ``tile_col_local``
-    indexing — is testable without a multi-device mesh.
-    """
-    nrb, ncb = plan.num_row_blocks, plan.num_col_blocks
-    x_owned = jnp.asarray(scatter_x_owned(sp, pad_x_blocks(x, ncb, plan.bn)))
-    idx = jnp.asarray(sp.send_idx)  # [U, U, L]
-    safe = jnp.maximum(idx, 0)
-    send = jnp.where(
-        (idx >= 0)[..., None], x_owned[jnp.arange(sp.num_units)[:, None, None], safe], 0.0
-    )  # [U(src), U(dst), L, bn]
-    recv = jnp.swapaxes(send, 0, 1)  # [U(dst), U(src), L, bn]
-
-    def one_unit(tiles, tile_row, tile_col_local, recv_u, src, lane):
-        ws = recv_u[src, lane]  # [W, bn] compact workspace
-        return _unit_spmv(tiles, tile_row, ws[tile_col_local], nrb)
-
-    partials = jax.vmap(one_unit)(
-        jnp.asarray(plan.tiles),
-        jnp.asarray(plan.tile_row),
-        jnp.asarray(sp.tile_col_local),
-        recv,
-        jnp.asarray(sp.recv_src),
-        jnp.asarray(sp.recv_lane),
-    )
-    y = partials.sum(axis=0).reshape(-1)
-    return np.asarray(y)[: plan.shape[0]]
+    """vmap execution of the *selective* exchange on a single host; one
+    emulated all_to_all carries all B right-hand sides."""
+    xb = jnp.asarray(pad_x(np.asarray(x, np.float32), plan.num_col_blocks, plan.bn))
+    return unblock_y(make_simulate_fn(plan, sp)(xb), plan.shape[0])
 
 
 def make_unit_mesh(num_units: int) -> Mesh:
@@ -144,7 +224,11 @@ def make_pmvc_step(
     Replicated mode: ``step(tiles, tile_row, tile_col, x_blocks)``.
     Selective mode: ``step(tiles, tile_row, tile_col_local, x_owned,
     send_idx, recv_src, recv_lane)`` with x block-col-sharded.
-    Returns replicated y blocks ``[NRB, bm]``.
+
+    x blocks may carry a trailing batch axis (``[NCB, bn, B]`` /
+    ``[U, per, bn, B]``); one all_to_all then moves all B vectors.
+    Returns replicated y blocks ``[NRB, bm(, B)]``. The jit cache keys
+    on shape, so one step serves every batch size.
     """
     nrb = plan.num_row_blocks
 
@@ -152,7 +236,7 @@ def make_pmvc_step(
 
         def step(tiles, tile_row, tile_col, x_blocks):
             # tiles/tile_*: [1, ...] local unit slice; x replicated.
-            y_part = _unit_spmv(tiles[0], tile_row[0], x_blocks[tile_col[0]], nrb)
+            y_part = _unit_spmm(tiles[0], tile_row[0], x_blocks[tile_col[0]], nrb)
             return jax.lax.psum(y_part, "unit")
 
         return jax.jit(
@@ -165,18 +249,17 @@ def make_pmvc_step(
         )
 
     def step_selective(tiles, tile_row, tile_col_local, x_owned, send_idx, recv_src, recv_lane):
-        # x_owned: [1, per, bn] local; send_idx: [1, U, L]; recv_*: [1, W].
+        # x_owned: [1, per, bn(, B)] local; send_idx: [1, U, L]; recv_*: [1, W].
         x_local = x_owned[0]
         idx = send_idx[0]  # [U, L]
         safe = jnp.maximum(idx, 0)
-        my_send = jnp.where(
-            (idx >= 0)[..., None], x_local[safe], 0.0
-        )  # [U, L, bn]
+        mask = (idx >= 0).reshape(idx.shape + (1,) * (x_local.ndim - 1))
+        my_send = jnp.where(mask, x_local[safe], 0.0)  # [U, L, bn(, B)]
         recv = jax.lax.all_to_all(
             my_send, "unit", split_axis=0, concat_axis=0, tiled=False
-        )  # [U, L, bn]; recv[v] = blocks v sent to me
-        ws = recv[recv_src[0], recv_lane[0]]  # [W, bn] compact workspace
-        y_part = _unit_spmv(tiles[0], tile_row[0], ws[tile_col_local[0]], nrb)
+        )  # [U, L, bn(, B)]; recv[v] = blocks v sent to me
+        ws = recv[recv_src[0], recv_lane[0]]  # [W, bn(, B)] compact workspace
+        y_part = _unit_spmm(tiles[0], tile_row[0], ws[tile_col_local[0]], nrb)
         return jax.lax.psum(y_part, "unit")
 
     return jax.jit(
@@ -197,25 +280,55 @@ def make_pmvc_step(
     )
 
 
-def phase_costs(
-    plan: DevicePlan, selective: Optional[SelectivePlan] = None, bytes_per: int = 4
-) -> Dict[str, float]:
-    """Analytic per-phase volumes for the benchmark tables (paper ch.4)."""
+def _message_counts(plan: DevicePlan, selective: Optional[SelectivePlan]) -> int:
+    """Point-to-point messages per exchange (the α-cost multiplier)."""
     u = plan.num_units
+    if selective is None:
+        return u * (u - 1)  # all-gather: every unit hears every other
+    off_diag = (selective.send_idx >= 0).any(axis=-1)
+    np.fill_diagonal(off_diag, False)
+    return int(off_diag.sum())
+
+
+def phase_costs(
+    plan: DevicePlan,
+    selective: Optional[SelectivePlan] = None,
+    bytes_per: int = 4,
+    batch: int = 1,
+) -> Dict[str, float]:
+    """Analytic per-phase volumes for the benchmark tables (paper ch.4).
+
+    ``batch`` is the SpMM width B: payload volumes scale with B while
+    the per-message overhead (``MESSAGE_OVERHEAD_BYTES`` × messages) is
+    paid once per exchange — so the ``*_per_rhs`` keys shrink as B
+    grows, the amortization the batch-first refactor buys.
+    """
+    u = plan.num_units
+    b = max(int(batch), 1)
     blk = plan.bm * plan.bn * bytes_per
-    scatter_naive = (u - 1) * plan.num_col_blocks * plan.bn * bytes_per
+    scatter_naive = (u - 1) * plan.num_col_blocks * plan.bn * bytes_per * b
     scatter = (
-        selective.wire_blocks * plan.bn * bytes_per if selective else scatter_naive
+        selective.wire_blocks * plan.bn * bytes_per * b
+        if selective
+        else scatter_naive
     )
-    flops = 2.0 * u * plan.t * plan.bm * plan.bn  # padded (realized) FLOPs
-    useful = 2.0 * float(plan.real_tiles.sum()) * plan.bm * plan.bn
-    gather = u * plan.num_row_blocks * plan.bm * bytes_per  # psum volume
+    msgs = _message_counts(plan, selective)
+    overhead = msgs * MESSAGE_OVERHEAD_BYTES
+    flops = 2.0 * u * plan.t * plan.bm * plan.bn * b  # padded (realized) FLOPs
+    useful = 2.0 * float(plan.real_tiles.sum()) * plan.bm * plan.bn * b
+    gather = u * plan.num_row_blocks * plan.bm * bytes_per * b  # psum volume
+    gather_overhead = u * MESSAGE_OVERHEAD_BYTES
     return {
+        "batch": float(b),
         "scatter_bytes": float(scatter),
         "scatter_bytes_naive": float(scatter_naive),
+        "scatter_messages": float(msgs),
+        "scatter_overhead_bytes": float(overhead),
+        "scatter_bytes_per_rhs": float(scatter + overhead) / b,
         "compute_flops": flops,
         "useful_flops": useful,
         "flop_efficiency": useful / flops if flops else 1.0,
         "gather_bytes": float(gather),
+        "gather_bytes_per_rhs": float(gather + gather_overhead) / b,
         "tile_bytes_resident": float(u * plan.t * blk),
     }

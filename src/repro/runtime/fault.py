@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 __all__ = ["FaultInjector", "WorkerFailure", "Heartbeat", "StragglerMonitor"]
 

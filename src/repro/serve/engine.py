@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ArchConfig
 from repro.models.api import Model
 from repro.models.moe import MeshCtx
 

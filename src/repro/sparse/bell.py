@@ -29,15 +29,25 @@ __all__ = ["BellShard", "BellMatrix", "pack_bell", "tile_counts", "pad_x_blocks"
 
 def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:
     """Zero-pad ``x`` to ``num_col_blocks * bn`` and reshape to the
-    ``[NCB, bn]`` block-column layout every BELL consumer gathers from.
+    block-column layout every BELL consumer gathers from: ``[NCB, bn]``
+    for a single vector ``[N]``, ``[NCB, bn, B]`` (trailing batch axis,
+    the SpMM right-hand-side stack) for a batch ``[B, N]``.
 
     The single block-pad implementation — the distributed executor
     (:mod:`repro.pmvc.dist`) and the per-shard kernel entry
     (:func:`repro.kernels.spmv.ops.pack_inputs`) both route here.
     """
-    xp = np.zeros(num_col_blocks * bn, dtype=np.float32)
-    xp[: x.shape[0]] = x
-    return xp.reshape(num_col_blocks, bn)
+    x = np.asarray(x)
+    if x.ndim == 1:
+        xp = np.zeros(num_col_blocks * bn, dtype=np.float32)
+        xp[: x.shape[0]] = x
+        return xp.reshape(num_col_blocks, bn)
+    if x.ndim != 2:
+        raise ValueError(f"x must be [N] or [B, N], got shape {x.shape}")
+    b, n = x.shape
+    xp = np.zeros((b, num_col_blocks * bn), dtype=np.float32)
+    xp[:, :n] = x
+    return np.moveaxis(xp.reshape(b, num_col_blocks, bn), 0, -1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,13 +6,12 @@ through the same code path — one source of truth for the compiled graph).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ArchConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.models.api import Model
 from repro.models.common import cross_entropy
 from repro.models.moe import MeshCtx

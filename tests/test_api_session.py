@@ -19,7 +19,7 @@ from repro.api import (
     register_solver,
     resolve_partitioner,
 )
-from repro.sparse import csr_from_coo, generate, PAPER_SUITE
+from repro.sparse import csr_from_coo
 from repro.sparse.formats import coo_from_dense
 from repro.sparse.generate import random_coo
 
@@ -53,6 +53,26 @@ def test_equivalence_sweep(combo_session, problem, exchange, executor):
     y = sess.spmv(x, executor=executor)
     assert y.shape == y_ref.shape
     assert _rel_err(y, y_ref) < 1e-5, (sess.combo, exchange, executor)
+
+
+@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("executor", ["simulate", "reference"])
+def test_batched_sweep_rows_equal_single_calls(
+    combo_session, problem, exchange, executor
+):
+    """Every (combo × exchange × executor) cell: one spmv on an [8, N]
+    batch row-equals 8 independent single-vector calls (fp32 tol)."""
+    a, x, _ = problem
+    xs = np.stack([np.roll(x, i).astype(np.float32) for i in range(8)])
+    sess = combo_session.with_exchange(exchange)
+    y_b = sess.spmv(xs, executor=executor)
+    assert y_b.shape == (8, a.shape[0])
+    for i in range(8):
+        y_1 = sess.spmv(xs[i], executor=executor)
+        np.testing.assert_allclose(
+            y_b[i], y_1, rtol=1e-5, atol=1e-4,
+            err_msg=f"{sess.combo}/{exchange}/{executor} row {i}",
+        )
 
 
 def test_topology_unit_mapping():
@@ -204,12 +224,18 @@ _SUBPROC = textwrap.dedent(
     a = random_coo(256, 3000, seed=9)
     x = np.random.default_rng(1).standard_normal(a.shape[1]).astype(np.float32)
     y_ref = csr_from_coo(a).matvec(x)
+    xs = np.random.default_rng(2).standard_normal((4, a.shape[1])).astype(np.float32)
+    csr = csr_from_coo(a)
+    ys_ref = np.stack([csr.matvec(xs[i]) for i in range(4)])
     for exchange in ("replicated", "selective"):
         sess = distribute(a, topology=Topology(2, 2), combo="NL-HC",
                           exchange=exchange, executor="shard_map")
         y = sess.spmv(x)
         err = np.abs(y - y_ref).max() / np.abs(y_ref).max()
         assert err < 1e-5, (exchange, err)
+        y_b = sess.spmv(xs)  # batched: one all_to_all carries all 4 RHS
+        err_b = np.abs(y_b - ys_ref).max() / np.abs(ys_ref).max()
+        assert y_b.shape == ys_ref.shape and err_b < 1e-5, (exchange, err_b)
     print("API_SHARDED_OK")
     """
 )

@@ -1,0 +1,279 @@
+"""Batch-first SpMM tier: ``spmv([B, N])`` parity against looped single
+calls on every layer (kernel, simulate runtime, API executors), batched
++ device-loop solver drivers, and solver edge cases (tol early-stop
+bookkeeping, cg breakdown)."""
+import numpy as np
+import pytest
+
+from repro.api import Topology, distribute
+from repro.core.nezgt import nezgt_partition
+from repro.kernels.spmv import pack_inputs, spmm_shard, spmm_shard_ref
+from repro.sparse import csr_from_coo, pack_bell, tile_counts
+from repro.sparse.bell import pad_x_blocks
+from repro.sparse.formats import COO, coo_from_dense
+from repro.sparse.generate import random_coo
+
+B = 8
+TOPO = Topology(2, 2)
+
+
+def _batch_ref(a, xs):
+    csr = csr_from_coo(a)
+    return np.stack([csr.matvec(xs[i]) for i in range(xs.shape[0])]).astype(
+        np.float32
+    )
+
+
+@pytest.fixture(scope="module")
+def problem():
+    a = random_coo(384, 5000, seed=11)
+    xs = (
+        np.random.default_rng(5)
+        .standard_normal((B, a.shape[1]))
+        .astype(np.float32)
+    )
+    return a, xs, _batch_ref(a, xs)
+
+
+# -- pad/unpad layout --------------------------------------------------------
+
+
+def test_pad_x_blocks_batched_layout():
+    x = np.arange(10, dtype=np.float32)
+    xb = pad_x_blocks(x, 3, 4)
+    assert xb.shape == (3, 4)
+    xs = np.stack([x, 2 * x])
+    xbb = pad_x_blocks(xs, 3, 4)
+    assert xbb.shape == (3, 4, 2)  # trailing batch axis
+    np.testing.assert_array_equal(xbb[..., 0], xb)
+    np.testing.assert_array_equal(xbb[..., 1], 2 * xb)
+    with pytest.raises(ValueError, match=r"\[N\] or \[B, N\]"):
+        pad_x_blocks(xs[None], 3, 4)
+
+
+# -- kernel layer ------------------------------------------------------------
+
+
+def test_kernel_spmm_matches_looped_spmv():
+    a = random_coo(192, 1500, seed=0)
+    bm = bn = 8
+    tc = tile_counts(a, bm, bn)
+    owner = nezgt_partition(tc, 3).assignment
+    bell = pack_bell(a, owner, 3, bm, bn)
+    xs = (
+        np.random.default_rng(1)
+        .standard_normal((B, a.shape[1]))
+        .astype(np.float32)
+    )
+    for shard in bell.shards:
+        tiles, tr, tcg, xb = pack_inputs(shard, xs, bn)
+        assert xb.shape[-1] == B
+        r = len(shard.row_blocks)
+        y_k = np.asarray(spmm_shard(tiles, tr, tcg, xb, r, interpret=True))
+        y_o = np.asarray(spmm_shard_ref(tiles, tr, tcg, xb, r))
+        assert y_k.shape == (r, bm, B)
+        np.testing.assert_allclose(y_k, y_o, rtol=1e-5, atol=1e-5)
+        for i in range(B):
+            _, _, _, xb1 = pack_inputs(shard, xs[i], bn)
+            y_1 = np.asarray(
+                spmm_shard(tiles, tr, tcg, xb1[..., None], r, interpret=True)
+            )[..., 0]
+            np.testing.assert_allclose(y_k[..., i], y_1, rtol=1e-5, atol=1e-5)
+
+
+# -- API layer: batched == looped through every executor ---------------------
+
+
+@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("executor", ["simulate", "reference"])
+def test_spmm_batch_rows_equal_single_calls(problem, exchange, executor):
+    a, xs, y_ref = problem
+    sess = distribute(a, topology=TOPO, combo="NL-HC", exchange=exchange)
+    y_b = sess.spmv(xs, executor=executor)
+    assert y_b.shape == (B, a.shape[0])
+    for i in range(B):
+        y_1 = sess.spmv(xs[i], executor=executor)
+        np.testing.assert_allclose(y_b[i], y_1, rtol=1e-5, atol=1e-4)
+    err = np.abs(y_b - y_ref).max() / (np.abs(y_ref).max() + 1e-30)
+    assert err < 1e-5, (exchange, executor, err)
+
+
+def test_device_spmm_traceable_and_matches(problem):
+    import jax
+    import jax.numpy as jnp
+
+    a, xs, y_ref = problem
+    sess = distribute(a, topology=TOPO, combo="NL-HL", exchange="selective")
+    mv = sess.device_spmm()
+    y = np.asarray(jax.jit(mv)(jnp.asarray(xs)))
+    err = np.abs(y - y_ref).max() / np.abs(y_ref).max()
+    assert err < 1e-5
+    y1 = np.asarray(mv(jnp.asarray(xs[0])))
+    assert y1.shape == (a.shape[0],)
+
+
+def test_costs_batch_amortization(problem):
+    a, _, _ = problem
+    sess = distribute(a, topology=TOPO, combo="NL-HC", exchange="selective")
+    per_rhs = [
+        sess.costs(batch=b)["scatter_bytes_per_rhs"] for b in (1, 8, 64)
+    ]
+    assert per_rhs[0] > per_rhs[1] > per_rhs[2]  # overhead amortizes
+    c1, c8 = sess.costs(batch=1), sess.costs(batch=8)
+    assert c8["scatter_bytes"] == pytest.approx(8 * c1["scatter_bytes"])
+    assert c8["scatter_messages"] == c1["scatter_messages"]
+    assert c8["batch"] == 8.0
+
+
+# -- solvers: batched drivers ------------------------------------------------
+
+
+def _spd_session(n=96, seed=3):
+    rng = np.random.default_rng(seed)
+    m = np.where(rng.random((n, n)) < 0.06, rng.standard_normal((n, n)), 0.0)
+    spd = m @ m.T + n * np.eye(n)
+    a = coo_from_dense(spd.astype(np.float32))
+    return distribute(a, topology=TOPO, combo="NL-HC")
+
+
+def test_block_power_b1_matches_power_iteration():
+    sess = _spd_session()
+    pi = sess.solve("power_iteration", iters=12)
+    bp = sess.solve("block_power_iteration", iters=12, block=1)
+    assert bp.value == pytest.approx(pi.value, rel=1e-5)
+    np.testing.assert_allclose(np.abs(bp.x[0]), np.abs(pi.x), atol=1e-4)
+
+
+def test_block_power_rejects_bad_block_sizes():
+    sess = _spd_session()
+    n = sess.matrix.shape[1]
+    with pytest.raises(ValueError, match="block must be in"):
+        sess.solve("block_power_iteration", block=0)
+    with pytest.raises(ValueError, match="block must be in"):
+        sess.solve("block_power_iteration", block=n + 1)
+
+
+def test_block_power_finds_dominant_eigenvalue():
+    sess = _spd_session()
+    res = sess.solve("block_power_iteration", iters=80, block=4)
+    dense = np.zeros(sess.matrix.shape, np.float64)
+    dense[sess.matrix.row, sess.matrix.col] = sess.matrix.val
+    top = np.linalg.eigvalsh(dense)[-1]
+    assert res.value == pytest.approx(top, rel=1e-3)
+    assert res.x.shape == (4, sess.matrix.shape[1])
+    # Rows stay orthonormal under QR re-orthonormalization.
+    np.testing.assert_allclose(res.x @ res.x.T, np.eye(4), atol=1e-4)
+
+
+def test_jacobi_batched_matches_looped():
+    sess = _spd_session()
+    n = sess.matrix.shape[0]
+    bs = np.random.default_rng(0).standard_normal((3, n)).astype(np.float32)
+    res = sess.solve("jacobi", iters=40, b=bs)
+    assert res.x.shape == (3, n)
+    for i in range(3):
+        r1 = sess.solve("jacobi", iters=40, b=bs[i])
+        np.testing.assert_allclose(res.x[i], r1.x, rtol=1e-5, atol=1e-5)
+
+
+def test_pagerank_multi_source_rows_match_single_seeds():
+    a = random_coo(200, 3000, seed=7)
+    link = COO(a.shape, a.row, a.col, np.abs(a.val).astype(np.float32))
+    sess = distribute(link, topology=TOPO, combo="NL-HL")
+    seeds = np.zeros((4, 200), np.float32)
+    seeds[np.arange(4), [5, 50, 100, 150]] = 1.0
+    res = sess.solve("pagerank", iters=15, seeds=seeds)
+    assert res.x.shape == (4, 200)
+    np.testing.assert_allclose(np.abs(res.x).sum(axis=1), 1.0, atol=1e-4)
+    for i in range(4):
+        r1 = sess.solve("pagerank", iters=15, seeds=seeds[i : i + 1])
+        np.testing.assert_allclose(res.x[i], r1.x[0], atol=1e-5)
+    with pytest.raises(ValueError, match="non-zero mass"):
+        sess.solve("pagerank", seeds=np.zeros((2, 200), np.float32))
+
+
+# -- solvers: device-resident loops ------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "solver,kw",
+    [
+        ("power_iteration", {}),
+        ("block_power_iteration", {"block": 4}),
+        ("jacobi", {}),
+        ("pagerank", {}),
+    ],
+)
+def test_device_loop_matches_host_loop(solver, kw):
+    sess = _spd_session()
+    host = sess.solve(solver, iters=10, **kw)
+    dev = sess.solve(solver, iters=10, device_loop=True, **kw)
+    assert dev.iters_run == host.iters_run == 10
+    assert dev.converged == host.converged
+    assert len(dev.residuals) == len(host.residuals)
+    assert dev.value == pytest.approx(host.value, rel=1e-4, abs=1e-5)
+    np.testing.assert_allclose(
+        dev.residuals, host.residuals, rtol=1e-3, atol=1e-3
+    )
+
+
+def test_device_loop_tol_early_stop():
+    sess = _spd_session()
+    host = sess.solve("jacobi", iters=100, tol=1e-4)
+    dev = sess.solve("jacobi", iters=100, tol=1e-4, device_loop=True)
+    assert host.converged and dev.converged
+    assert dev.iters_run == host.iters_run < 100
+    assert dev.residuals[-1] < 1e-4
+
+
+# -- solver edge cases: tol bookkeeping + cg breakdown -----------------------
+
+
+@pytest.mark.parametrize(
+    "solver,kw",
+    [
+        ("power_iteration", {}),
+        ("jacobi", {}),
+        ("pagerank", {}),
+        ("cg", {}),
+    ],
+)
+def test_tol_early_stop_bookkeeping(solver, kw):
+    sess = _spd_session()
+    res = sess.solve(solver, iters=200, tol=1e-3, **kw)
+    assert res.converged, (solver, res.residuals[-5:])
+    assert res.iters_run < 200
+    assert res.residuals[-1] < 1e-3
+    # One residual entry per executed iteration (cg logs the initial
+    # residual too).
+    expected = res.iters_run + (1 if solver == "cg" else 0)
+    assert len(res.residuals) == expected, solver
+
+
+@pytest.mark.parametrize(
+    "solver,kw",
+    [
+        ("power_iteration", {}),
+        ("jacobi", {}),
+        ("pagerank", {}),
+        ("block_power_iteration", {"block": 2}),
+    ],
+)
+def test_no_tol_runs_all_iters_unconverged(solver, kw):
+    sess = _spd_session()
+    res = sess.solve(solver, iters=5, tol=0.0, **kw)
+    assert not res.converged
+    assert res.iters_run == 5
+    assert len(res.residuals) == 5
+
+
+def test_cg_breakdown_branch():
+    """b = 0 ⇒ r = p = 0 ⇒ pᵀAp = 0: cg must stop on the breakdown
+    branch after one iteration, unconverged (tol unset)."""
+    sess = _spd_session()
+    n = sess.matrix.shape[0]
+    res = sess.solve("cg", iters=30, b=np.zeros(n, np.float32))
+    assert res.iters_run == 1
+    assert not res.converged
+    assert res.residuals == [0.0]
+    np.testing.assert_array_equal(res.x, np.zeros(n, np.float32))

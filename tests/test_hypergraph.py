@@ -1,6 +1,5 @@
 """Hypergraph partitioner: cut semantics + balance + refinement gain."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.hypergraph import (

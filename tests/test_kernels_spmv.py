@@ -1,5 +1,4 @@
 """BELL SpMV Pallas kernel: shape/dtype sweep vs jnp oracle + CSR."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

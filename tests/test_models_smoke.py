@@ -8,7 +8,6 @@ import pytest
 
 from repro.config import TrainConfig, get_arch
 from repro.configs import ARCH_IDS
-from repro.data import make_batch
 from repro.models import build
 from repro.models.common import count_params
 from repro.optim import init_opt

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.nezgt import fd_criterion, fragment_loads, nezgt_partition
+from repro.core.nezgt import fragment_loads, nezgt_partition
 
 
 def test_paper_example_row():

@@ -1,7 +1,6 @@
 """Roofline analysis: HLO collective parsing + term arithmetic."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import SHAPES, get_arch
 from repro.roofline import (

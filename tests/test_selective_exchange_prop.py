@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.api import Topology, distribute
-from repro.sparse.bell import pad_x_blocks
 from repro.sparse.generate import banded_coo, powerlaw_coo, random_coo
 
 CASES = [

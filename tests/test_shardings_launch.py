@@ -4,10 +4,8 @@ Uses abstract trees only (no 512-device init — that's the dry-run's
 job); specs are validated structurally against an AbstractMesh of the
 production shape.
 """
-import jax
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.config import SHAPES, get_arch, shape_applicable
 from repro.configs import ARCH_IDS

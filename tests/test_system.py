@@ -27,7 +27,8 @@ def test_train_checkpoint_serve_pipeline(tmp_path):
                      learning_rate=5e-3)
     step_fn = jax.jit(make_train_step(model, tc))
     dc = DataConfig(cfg.vocab_size, seq_len=32, global_batch=4, seed=1)
-    batch_fn = lambda s: {"tokens": jnp.asarray(SyntheticStream(dc, start_step=s).batch_at(s))}
+    def batch_fn(s):
+        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=s).batch_at(s))}
     ckpt = CheckpointManager(str(tmp_path), keep=2)
     res = TrainLoop(step_fn, batch_fn, tc, ckpt=ckpt).run(params, num_steps=6)
     assert res.metrics_history[-1]["loss"] < res.metrics_history[0]["loss"]
@@ -79,7 +80,8 @@ _ELASTIC = textwrap.dedent(
         mgr = CheckpointManager(d)
         # "Trained" on a 4-device mesh...
         mesh4 = make_mesh_any((4,), ("model",))
-        spec = lambda k, leaf: P("model") if leaf.ndim else P()
+        def spec(k, leaf):
+            return P("model") if leaf.ndim else P()
         t4 = reshard_tree(tree, mesh4, spec)
         mgr.save(3, t4)
         # ...restored onto an 8-device mesh (elastic up-scale).

@@ -21,7 +21,8 @@ def _setup(tmp_path=None, steps=10, ckpt_every=4, micro=1):
     )
     step_fn = jax.jit(make_train_step(model, tc))
     dc = DataConfig(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
-    batch_fn = lambda s: {"tokens": jnp.asarray(SyntheticStream(dc, start_step=s).batch_at(s))}
+    def batch_fn(s):
+        return {"tokens": jnp.asarray(SyntheticStream(dc, start_step=s).batch_at(s))}
     ckpt = CheckpointManager(str(tmp_path), keep=3) if tmp_path else None
     return params, tc, step_fn, batch_fn, ckpt
 
