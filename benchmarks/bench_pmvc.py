@@ -1,18 +1,26 @@
 """Paper Figures 4.16–4.55: distributed PMVC phase decomposition,
-swept over the SpMM batch width B.
+swept over the SpMM batch width B and the exchange regime.
 
-Opens one :class:`repro.api.SparseSession` per (matrix × combo) cell and
-runs the vmap-simulated executor, reporting per-phase *realized* volumes
-(scatter bytes — naive vs selective exchange — compute FLOPs with
-padding waste, gather bytes) and CPU wall-time per PMVC call
-(algorithmic comparison only; roofline projections for TPU come from the
-dry-run artifacts).
+Opens one :class:`repro.api.SparseSession` per (matrix × combo ×
+exchange) cell and runs the vmap-simulated executor, reporting per-phase
+*realized* volumes (scatter bytes — naive vs selective exchange —
+compute FLOPs with padding waste, gather bytes) and CPU wall-time per
+PMVC call (algorithmic comparison only; roofline projections for TPU
+come from the dry-run artifacts).
 
-Batch-first sweep: each cell runs B ∈ ``batch_sizes`` stacked
-right-hand sides through one SpMM and compares against B sequential
-single-vector calls — ``speedup_per_rhs`` is the amortization the
-batched exchange buys, ``scatter_bytes_per_rhs`` the shrinking
-per-vector wire cost (paper ch.4's startup-vs-payload decomposition).
+Two sweeps compose:
+
+* **Batch-first** (PR 2): each cell runs B ∈ ``batch_sizes`` stacked
+  right-hand sides through one SpMM and compares against B sequential
+  single-vector calls — ``speedup_per_rhs`` is the amortization the
+  batched exchange buys (paper ch.4's startup-vs-payload
+  decomposition).
+* **Blocking vs overlap** (DESIGN.md §9): every combo runs both the
+  blocking ``selective`` exchange and the pipelined ``overlap`` one;
+  overlap rows carry the cost model's ``t_local`` / ``t_halo`` /
+  ``overlap_efficiency`` terms plus the measured
+  ``vs_blocking_speedup``, and the summary reports the modeled
+  efficiency and measured speedup per combo.
 
 ``run(json_path=...)`` additionally emits the rows as machine-readable
 JSON (``BENCH_pmvc.json``) so the perf trajectory is tracked across PRs.
@@ -30,6 +38,8 @@ from repro.sparse import csr_from_coo, generate, PAPER_SUITE
 
 __all__ = ["run"]
 
+BLOCKING_EXCHANGE = "selective"
+
 
 def _time_call(fn, iters: int) -> float:
     fn()  # warm-up (jit compile + device placement)
@@ -39,25 +49,33 @@ def _time_call(fn, iters: int) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _geomean(vals: List[float]) -> float:
+    return float(np.exp(np.mean(np.log(vals))))
+
+
 def run(
     matrices: Iterable[str] = ("thermal", "t2dal", "epb1"),
     f: int = 4,
     cores: int = 4,
-    combos: Iterable[str] = ("NL-HL", "NC-HC"),
+    combos: Iterable[str] = ("NL-HL", "NL-HC", "NC-HL", "NC-HC"),
     iters: int = 5,
     bm: int = 16,
-    exchange: str = "selective",
+    exchanges: Iterable[str] = (BLOCKING_EXCHANGE, "overlap"),
     batch_sizes: Iterable[int] = (1, 8, 64),
     json_path: Optional[str] = None,
     print_rows: bool = True,
 ) -> List[Dict]:
     rows: List[Dict] = []
     topo = Topology(f, cores)
+    # Measure the blocking exchange first so overlap rows can report the
+    # measured blocking-vs-overlap ratio for the same (matrix, combo, B).
+    exchanges = sorted(exchanges, key=lambda e: e != BLOCKING_EXCHANGE)
+    blocking_us: Dict[tuple, float] = {}
     if print_rows:
         print(
-            "matrix,combo,units,B,lb_tiles,flop_eff,scatter_per_rhs,"
-            "scatter_naive,gather,us_per_call,us_per_rhs,seq_us_per_rhs,"
-            "speedup_per_rhs,rel_err"
+            "matrix,combo,exchange,units,B,lb_tiles,flop_eff,scatter_per_rhs,"
+            "gather,us_per_call,us_per_rhs,speedup_per_rhs,"
+            "vs_blocking,overlap_eff,rel_err"
         )
     for name in matrices:
         a = generate(PAPER_SUITE[name])
@@ -67,61 +85,99 @@ def run(
         csr = csr_from_coo(a)
         ys_ref = np.stack([csr.matvec(xs[i]) for i in range(bmax)])
         for combo in combos:
-            sess = distribute(a, topology=topo, combo=combo,
-                              exchange=exchange, block=bm)
-            # Sequential baseline: B independent single-vector calls pay
-            # one exchange each (the pre-batching serving loop), so the
-            # per-RHS sequential cost is the mean single-call time,
-            # independent of B.
-            x0 = xs[0]
-            seq_us_per_rhs = _time_call(lambda: sess.spmv(x0), iters)
-            for b in batch_sizes:
-                xb = xs[0] if b == 1 else xs[:b]
-                y = sess.spmv(xb)
-                us = _time_call(lambda: sess.spmv(xb), iters)
-                y2 = y[None] if b == 1 else y
-                err = float(
-                    np.abs(y2 - ys_ref[:b]).max()
-                    / (np.abs(ys_ref[:b]).max() + 1e-12)
-                )
-                costs = sess.costs(batch=b)
-                costs.pop("batch")  # the row carries it as an int already
-                us_per_rhs = us / b
-                row = dict(
-                    matrix=name, combo=combo, units=topo.units, batch=b,
-                    us_per_call=us, us_per_rhs=us_per_rhs,
-                    seq_us_per_rhs=seq_us_per_rhs,
-                    speedup_per_rhs=seq_us_per_rhs / us_per_rhs,
-                    rel_err=err, **costs,
-                )
-                rows.append(row)
-                if print_rows:
-                    print(
-                        f"{name},{combo},{topo.units},{b},"
-                        f"{costs['lb_tiles']:.3f},"
-                        f"{costs['flop_efficiency']:.3f},"
-                        f"{costs['scatter_bytes_per_rhs']:.2e},"
-                        f"{costs['scatter_bytes_naive']:.2e},"
-                        f"{costs['gather_bytes']:.2e},{us:.0f},"
-                        f"{us_per_rhs:.0f},{seq_us_per_rhs:.0f},"
-                        f"{seq_us_per_rhs / us_per_rhs:.2f},{err:.1e}"
+            for exchange in exchanges:
+                sess = distribute(a, topology=topo, combo=combo,
+                                  exchange=exchange, block=bm)
+                # Sequential baseline: B independent single-vector calls
+                # pay one exchange each (the pre-batching serving loop),
+                # so the per-RHS sequential cost is the mean single-call
+                # time, independent of B.
+                x0 = xs[0]
+                seq_us_per_rhs = _time_call(lambda: sess.spmv(x0), iters)
+                for b in batch_sizes:
+                    xb = xs[0] if b == 1 else xs[:b]
+                    y = sess.spmv(xb)
+                    us = _time_call(lambda: sess.spmv(xb), iters)
+                    y2 = y[None] if b == 1 else y
+                    err = float(
+                        np.abs(y2 - ys_ref[:b]).max()
+                        / (np.abs(ys_ref[:b]).max() + 1e-12)
                     )
-                assert err < 1e-3, (name, combo, b, err)
-    summary = {}
+                    costs = sess.costs(batch=b)
+                    costs.pop("batch")  # the row carries it as an int already
+                    us_per_rhs = us / b
+                    if exchange == BLOCKING_EXCHANGE:
+                        blocking_us[(name, combo, b)] = us
+                    base = blocking_us.get((name, combo, b))
+                    row = dict(
+                        matrix=name, combo=combo, exchange=exchange,
+                        units=topo.units, batch=b,
+                        us_per_call=us, us_per_rhs=us_per_rhs,
+                        seq_us_per_rhs=seq_us_per_rhs,
+                        speedup_per_rhs=seq_us_per_rhs / us_per_rhs,
+                        rel_err=err, **costs,
+                    )
+                    if exchange != BLOCKING_EXCHANGE and base is not None:
+                        row["vs_blocking_speedup"] = base / us
+                    rows.append(row)
+                    if print_rows:
+                        vsb = row.get("vs_blocking_speedup")
+                        oeff = costs.get("overlap_efficiency")
+                        print(
+                            f"{name},{combo},{exchange},{topo.units},{b},"
+                            f"{costs['lb_tiles']:.3f},"
+                            f"{costs['flop_efficiency']:.3f},"
+                            f"{costs['scatter_bytes_per_rhs']:.2e},"
+                            f"{costs['gather_bytes']:.2e},{us:.0f},"
+                            f"{us_per_rhs:.0f},"
+                            f"{seq_us_per_rhs / us_per_rhs:.2f},"
+                            f"{'' if vsb is None else f'{vsb:.2f}'},"
+                            f"{'' if oeff is None else f'{oeff:.3f}'},"
+                            f"{err:.1e}"
+                        )
+                    assert err < 1e-3, (name, combo, exchange, b, err)
+    summary: Dict = {}
     for b in batch_sizes:
-        sp = [r["speedup_per_rhs"] for r in rows if r["batch"] == b]
+        sp = [
+            r["speedup_per_rhs"]
+            for r in rows
+            if r["batch"] == b and r["exchange"] == BLOCKING_EXCHANGE
+        ]
         if sp:
-            summary[f"speedup_per_rhs_geomean_b{b}"] = float(
-                np.exp(np.mean(np.log(sp)))
-            )
+            summary[f"speedup_per_rhs_geomean_b{b}"] = _geomean(sp)
+    # Blocking-vs-overlap comparison, per combo: the cost model's
+    # projected efficiency and the measured wall-time ratio.
+    overlap_summary: Dict[str, Dict] = {}
+    for combo in combos:
+        orows = [r for r in rows if r["combo"] == combo and r["exchange"] == "overlap"]
+        if not orows:
+            continue
+        entry: Dict = {}
+        for b in batch_sizes:
+            eff = [r["overlap_efficiency"] for r in orows if r["batch"] == b]
+            if eff:
+                entry[f"overlap_efficiency_b{b}"] = float(np.mean(eff))
+        measured = [r["vs_blocking_speedup"] for r in orows if "vs_blocking_speedup" in r]
+        if measured:
+            entry["measured_vs_blocking_geomean"] = _geomean(measured)
+        entry["local_tile_fraction_mean"] = float(
+            np.mean([r["local_tile_fraction"] for r in orows])
+        )
+        overlap_summary[combo] = entry
+    if overlap_summary:
+        summary["overlap_vs_blocking"] = overlap_summary
     if print_rows:
         for key, v in summary.items():
-            print(f"# {key}={v:.2f}")
+            if isinstance(v, dict):
+                for combo, entry in v.items():
+                    print(f"# {key}[{combo}]={json.dumps(entry)}")
+            else:
+                print(f"# {key}={v:.2f}")
     if json_path:
         payload = {
             "bench": "pmvc",
             "topology": {"nodes": f, "cores": cores},
-            "exchange": exchange,
+            "exchanges": list(exchanges),
             "block": bm,
             "timing_iters": iters,
             "summary": summary,

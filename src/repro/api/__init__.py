@@ -26,7 +26,9 @@ partitioner (``combo=``)  ``NL-HL  NL-HC  NC-HL  NC-HC`` (the thesis'
                           four, plus any generic ``XX-YY`` [MeH12]
                           combo), flat ``nezgt`` / ``hyper``
 exchange                  ``replicated`` (all-gather), ``selective``
-                          (static all_to_all of the C_Xk blocks)
+                          (static all_to_all of the C_Xk blocks),
+                          ``overlap`` (selective + pipelined local/halo
+                          contraction hiding the exchange)
 executor                  ``simulate`` (vmap, single host),
                           ``shard_map`` (device mesh), ``reference``
                           (sequential CSR oracle)

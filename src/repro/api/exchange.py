@@ -1,6 +1,7 @@
 """Exchange-strategy registry: how x reaches the units that need it.
 
-The paper's two fan-out regimes (ch.4 measurement decomposition):
+The paper's two fan-out regimes (ch.4 measurement decomposition), plus
+the pipelined refinement of the second (DESIGN.md §9):
 
 * ``"replicated"`` — *échange total*: every unit receives the whole x
   (all-gather). Simple, and the baseline the selective volumes are
@@ -8,17 +9,28 @@ The paper's two fan-out regimes (ch.4 measurement decomposition):
 * ``"selective"`` — the static all_to_all schedule carrying only the
   C_Xk block-columns each unit's tiles touch
   (:func:`repro.pmvc.plan_device.build_selective_plan`).
+* ``"overlap"`` — the selective schedule plus a plan-time local/halo
+  tile split (:func:`repro.pmvc.plan_device.build_overlap_plan`): the
+  runtime issues the all_to_all first, contracts the tiles whose x
+  block the unit already owns while the transfer is in flight, then
+  stream-accumulates the halo contribution — ``T_iter ≈ max(T_comm,
+  T_local) + T_halo`` instead of ``T_comm + T_comp``.
 
 An exchange strategy is a callable ``(device_plan: DevicePlan) ->
-Optional[SelectivePlan]``; ``None`` means replicated semantics, which
-every executor understands.
+ExchangePlan``: ``None`` means replicated semantics, a
+:class:`SelectivePlan` the blocking selective exchange, an
+:class:`OverlapPlan` the pipelined one — every executor understands all
+three.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 from repro.api.registry import Registry
-from repro.pmvc.plan_device import DevicePlan, SelectivePlan, build_selective_plan
+from repro.pmvc.plan_device import (
+    DevicePlan,
+    ExchangePlan,
+    build_overlap_plan,
+    build_selective_plan,
+)
 
 __all__ = ["EXCHANGES", "register_exchange"]
 
@@ -27,10 +39,15 @@ register_exchange = EXCHANGES.register
 
 
 @register_exchange("replicated")
-def replicated(plan: DevicePlan) -> Optional[SelectivePlan]:
+def replicated(plan: DevicePlan) -> ExchangePlan:
     return None
 
 
 @register_exchange("selective")
-def selective(plan: DevicePlan) -> Optional[SelectivePlan]:
+def selective(plan: DevicePlan) -> ExchangePlan:
     return build_selective_plan(plan)
+
+
+@register_exchange("overlap")
+def overlap(plan: DevicePlan) -> ExchangePlan:
+    return build_overlap_plan(plan)

@@ -14,7 +14,8 @@ Built-ins:
 * ``"simulate"`` — vmap over a stacked unit axis on a single host (the
   CPU test / paper-reproduction path). Honors the session's exchange
   strategy: replicated gathers from the padded global x, selective runs
-  the emulated all_to_all workspace path.
+  the emulated all_to_all workspace path, overlap the pipelined
+  local/halo split (DESIGN.md §9).
 * ``"shard_map"`` — jitted shard_map over a device mesh, one unit per
   device (the production path; needs ``topology.units`` JAX devices,
   e.g. via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
@@ -38,6 +39,7 @@ from repro.pmvc.dist import (
     scatter_x_owned,
     unblock_y,
 )
+from repro.pmvc.plan_device import OverlapPlan
 from repro.sparse.bell import pad_x_blocks
 from repro.sparse.formats import csr_from_coo
 
@@ -103,9 +105,41 @@ def shard_map_executor(session: "SparseSession") -> SpmvFn:
     dp, sp = session.device_plan, session.selective
     mesh = make_unit_mesh(dp.num_units)
     step = make_pmvc_step(dp, mesh, selective=sp)
+    n = dp.shape[0]
+
+    if isinstance(sp, OverlapPlan):
+        op = sp
+        local_tiles = jnp.asarray(op.local_tiles)
+        local_row = jnp.asarray(op.local_row)
+        local_slot = jnp.asarray(op.local_slot)
+        halo_tiles = jnp.asarray(op.halo_tiles)
+        halo_row = jnp.asarray(op.halo_row)
+        halo_slot = jnp.asarray(op.halo_slot)
+        send_idx = jnp.asarray(op.selective.send_idx)
+        recv_src = jnp.asarray(op.selective.recv_src)
+        recv_lane = jnp.asarray(op.selective.recv_lane)
+
+        def spmv_overlap(x: np.ndarray) -> np.ndarray:
+            xb = pad_x_blocks(np.asarray(x, np.float32), dp.num_col_blocks, dp.bn)
+            x_owned = jnp.asarray(scatter_x_owned(op.selective, xb))
+            y = step(
+                local_tiles,
+                local_row,
+                local_slot,
+                halo_tiles,
+                halo_row,
+                halo_slot,
+                x_owned,
+                send_idx,
+                recv_src,
+                recv_lane,
+            )
+            return unblock_y(y, n)
+
+        return spmv_overlap
+
     tiles = jnp.asarray(dp.tiles)
     tile_row = jnp.asarray(dp.tile_row)
-    n = dp.shape[0]
 
     if sp is None:
         tile_col = jnp.asarray(dp.tile_col)

@@ -16,8 +16,8 @@ from repro.api.executors import EXECUTORS, SpmvFn
 from repro.api.partitioners import PartitionResult, resolve_partitioner
 from repro.api.solvers import SOLVERS, SolveResult
 from repro.api.topology import Topology
-from repro.pmvc.dist import phase_costs
-from repro.pmvc.plan_device import DevicePlan, SelectivePlan, pack_units
+from repro.pmvc.dist import ExchangePlan, phase_costs
+from repro.pmvc.plan_device import DevicePlan, pack_units
 from repro.sparse.formats import COO
 
 __all__ = ["SparseSession", "distribute"]
@@ -39,7 +39,7 @@ class SparseSession:
         device_plan: DevicePlan,
         *,
         exchange: str,
-        selective: Optional[SelectivePlan],
+        selective: ExchangePlan,
         executor: str,
     ):
         self.matrix = matrix
@@ -112,7 +112,10 @@ class SparseSession:
         paper's measurement columns (LB, FD, cut, scatter/gather bytes,
         FLOP efficiency). ``batch`` is the SpMM width B — payload scales
         with B while per-message overhead amortizes, so the
-        ``*_per_rhs`` keys shrink as B grows."""
+        ``*_per_rhs`` keys shrink as B grows. Under
+        ``exchange="overlap"`` the dict also carries the pipelined time
+        model (``t_local`` / ``t_halo`` / ``overlap_efficiency`` —
+        DESIGN.md §9)."""
         out: Dict[str, float] = {
             "lb_nodes": self.partition.lb_nodes,
             "lb_cores": self.partition.lb_cores,
@@ -130,7 +133,15 @@ class SparseSession:
     # -- cheap re-configuration (planning artifacts shared) ----------------
 
     def with_executor(self, executor: str) -> "SparseSession":
-        """Same plans, different default executor; compiled state shared."""
+        """Same plans *and exchange strategy*, different default executor.
+
+        The derived session keeps ``exchange`` / ``selective`` (the
+        exchange plan object is shared, not re-derived) and shares the
+        compiled-closure cache both ways: an executor built through
+        either session is visible to the other — safe because every
+        closure is keyed on the executor name and captures only the
+        shared planning artifacts.
+        """
         EXECUTORS.get(executor)  # fail fast on unknown names
         sess = SparseSession(
             self.matrix,
@@ -145,7 +156,12 @@ class SparseSession:
         return sess
 
     def with_exchange(self, exchange: str) -> "SparseSession":
-        """Same partition/packing, re-planned exchange schedule."""
+        """Same partition/packing, re-planned exchange schedule.
+
+        Unlike :meth:`with_executor` the compiled-closure cache is
+        **not** shared: executor closures capture the exchange plan, so
+        the derived session starts cold and rebuilds them lazily.
+        """
         return SparseSession(
             self.matrix,
             self.topology,
@@ -181,6 +197,12 @@ def distribute(
     two-level combinations (``"NL-HC"`` etc.), a generic ``"XX-YY"``
     [MeH12] combo, flat ``"nezgt"``/``"hyper"``, or a user strategy
     registered with :func:`repro.api.register_partitioner`.
+
+    ``exchange`` picks the x fan-out: ``"replicated"`` (all-gather),
+    ``"selective"`` (static all_to_all of the needed blocks) or
+    ``"overlap"`` (selective + pipelined local/halo contraction — the
+    exchange hides behind the tiles whose x the unit already owns;
+    DESIGN.md §9).
     """
     bm, bn = (block, block) if isinstance(block, int) else block
     part = resolve_partitioner(combo)(a, topology, seed=seed, **partitioner_kw)

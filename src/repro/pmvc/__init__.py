@@ -13,10 +13,13 @@ import warnings
 _EXPORTS = {
     "DevicePlan": "repro.pmvc.plan_device",
     "SelectivePlan": "repro.pmvc.plan_device",
+    "OverlapPlan": "repro.pmvc.plan_device",
     "pack_units": "repro.pmvc.plan_device",
     "build_selective_plan": "repro.pmvc.plan_device",
+    "build_overlap_plan": "repro.pmvc.plan_device",
     "pmvc_simulate": "repro.pmvc.dist",
     "pmvc_simulate_selective": "repro.pmvc.dist",
+    "pmvc_simulate_overlap": "repro.pmvc.dist",
     "make_pmvc_step": "repro.pmvc.dist",
     "make_unit_mesh": "repro.pmvc.dist",
     "phase_costs": "repro.pmvc.dist",

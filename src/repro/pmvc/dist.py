@@ -21,12 +21,22 @@ Everything is **batch-first**: x may be one vector ``[N]`` or a stack
 paper's scatter/gather volumes amortize over the batch
 (:func:`phase_costs` with ``batch=``).
 
-Entry points: ``pmvc_simulate`` / ``pmvc_simulate_selective`` (vmap over
-a stacked unit axis — CPU tests and the paper-reproduction benchmarks),
-``make_simulate_fn`` (the same math as a reusable — optionally jitted —
-device closure over hoisted plan arrays; what the ``simulate`` executor
-and the device-resident solver loops build on), and ``make_pmvc_step``
-(shard_map over a device mesh — the production path and dry-run).
+A third regime **overlaps** the two phases (DESIGN.md §9): the plan-time
+local/halo tile split (:class:`repro.pmvc.plan_device.OverlapPlan`) lets
+the runtime issue the halo all_to_all first, contract the local tiles —
+whose x blocks the unit already owns — while the collective is in
+flight, then stream-accumulate the halo contribution from the delivered
+workspace: ``T_iter ≈ max(T_comm, T_local) + T_halo`` instead of
+``T_comm + T_comp`` (the FMM-over-runtime pipelining trick, Agullo et
+al. 2012). :func:`phase_costs` carries the matching analytic model.
+
+Entry points: ``pmvc_simulate`` / ``pmvc_simulate_selective`` /
+``pmvc_simulate_overlap`` (vmap over a stacked unit axis — CPU tests and
+the paper-reproduction benchmarks), ``make_simulate_fn`` (the same math
+as a reusable — optionally jitted — device closure over hoisted plan
+arrays; what the ``simulate`` executor and the device-resident solver
+loops build on), and ``make_pmvc_step`` (shard_map over a device mesh —
+the production path and dry-run).
 """
 from __future__ import annotations
 
@@ -42,12 +52,18 @@ try:  # jax >= 0.5
 except ImportError:  # pragma: no cover - version-dependent
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from repro.pmvc.plan_device import DevicePlan, SelectivePlan
+from repro.pmvc.plan_device import (
+    DevicePlan,
+    ExchangePlan,
+    OverlapPlan,
+    SelectivePlan,
+)
 from repro.sparse.bell import pad_x_blocks
 
 __all__ = [
     "pmvc_simulate",
     "pmvc_simulate_selective",
+    "pmvc_simulate_overlap",
     "make_simulate_fn",
     "make_pmvc_step",
     "make_unit_mesh",
@@ -56,6 +72,8 @@ __all__ = [
     "pad_x",
     "scatter_x_owned",
     "MESSAGE_OVERHEAD_BYTES",
+    "MODEL_LINK_BYTES_PER_S",
+    "MODEL_UNIT_FLOPS_PER_S",
 ]
 
 # α term of the exchange cost model: fixed per-message overhead (header +
@@ -63,6 +81,14 @@ __all__ = [
 # batch — the reason bytes-per-RHS shrinks as B grows (ch.4's
 # startup-vs-payload decomposition).
 MESSAGE_OVERHEAD_BYTES = 512
+
+# β and peak terms of the analytic time model (DESIGN.md §9): a 10 GbE
+# commodity link (the paper's cluster class) and one unit's sustained
+# SpMM rate. Only *ratios* of the derived times are meaningful — the
+# constants pin t_* terms so the overlap_efficiency projection and its
+# golden tests are deterministic.
+MODEL_LINK_BYTES_PER_S = 1.25e9
+MODEL_UNIT_FLOPS_PER_S = 5.0e10
 
 
 def pad_x(x: np.ndarray, ncb: int, bn: int) -> np.ndarray:
@@ -119,14 +145,52 @@ def _unit_spmm(
     return y.at[tile_row].add(contribs)
 
 
+def _emulated_exchange(owned, send_idx, xb):
+    """Device-side ownership scatter + emulated static all_to_all:
+    ``recv[u, v, l] = send[v, u, l]`` — the exact routing of the
+    shard_map executors (−1 slots masked to zero blocks), testable
+    without a multi-device mesh. ``owned`` is ``[U, per]``, ``send_idx``
+    ``[U, U, L]``, ``xb`` the padded global x ``[NCB, bn(, B)]``.
+    Returns ``(x_owned, recv)``: the block-col-sharded x ``[U, per,
+    bn(, B)]`` and the per-unit receive workspace ``[U(dst), U(src), L,
+    bn(, B)]``."""
+    omask = (owned >= 0).reshape(owned.shape + (1,) * (xb.ndim - 1))
+    x_owned = jnp.where(omask, xb[jnp.maximum(owned, 0)], 0.0)
+    smask = (send_idx >= 0).reshape(send_idx.shape + (1,) * (xb.ndim - 1))
+    safe = jnp.maximum(send_idx, 0)
+    units = jnp.arange(owned.shape[0])
+    send = jnp.where(
+        smask, x_owned[units[:, None, None], safe], 0.0
+    )  # [U(src), U(dst), L, bn(, B)]
+    return x_owned, jnp.swapaxes(send, 0, 1)
+
+
+def _send_all_to_all(x_local, send_idx):
+    """shard_map-side counterpart of :func:`_emulated_exchange`: mask the
+    unit's outgoing blocks (``send_idx`` ``[U, L]`` slots into the local
+    shard, −1 = unused lane) and run the collective. Returns ``recv``
+    ``[U, L, bn(, B)]`` — ``recv[v]`` = blocks v sent to me."""
+    safe = jnp.maximum(send_idx, 0)
+    mask = (send_idx >= 0).reshape(send_idx.shape + (1,) * (x_local.ndim - 1))
+    my_send = jnp.where(mask, x_local[safe], 0.0)  # [U, L, bn(, B)]
+    return jax.lax.all_to_all(
+        my_send, "unit", split_axis=0, concat_axis=0, tiled=False
+    )
+
+
 def make_simulate_fn(
     plan: DevicePlan,
-    selective: Optional[SelectivePlan] = None,
+    selective: ExchangePlan = None,
     *,
     jit: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Build ``run(xb) -> y_blocks``, the vmap-over-units PMVC on padded
     x blocks (``[NCB, bn]`` or ``[NCB, bn, B]`` → ``[NRB, bm(, B)]``).
+
+    ``selective`` picks the exchange regime: ``None`` (replicated),
+    a :class:`SelectivePlan` (blocking selective all_to_all) or an
+    :class:`OverlapPlan` (pipelined local/halo — local tiles contract
+    from the owned x shard, halo tiles from the delivered workspace).
 
     Plan arrays are hoisted to device once, here — callers that keep the
     closure (the ``simulate`` executor, the ``device_loop`` solver fast
@@ -135,6 +199,8 @@ def make_simulate_fn(
     ``lax.fori_loop`` / ``while_loop`` solver bodies.
     """
     nrb = plan.num_row_blocks
+    if isinstance(selective, OverlapPlan):
+        return _make_simulate_overlap_fn(plan, selective, jit=jit)
     tiles = jnp.asarray(plan.tiles)
     tile_row = jnp.asarray(plan.tile_row)
 
@@ -156,22 +222,9 @@ def make_simulate_fn(
     send_idx = jnp.asarray(sp.send_idx)  # [U, U, L]
     recv_src = jnp.asarray(sp.recv_src)
     recv_lane = jnp.asarray(sp.recv_lane)
-    units = jnp.arange(sp.num_units)
 
     def run_selective(xb: jax.Array) -> jax.Array:
-        # Device-side ownership scatter (x block-col-sharded per unit).
-        omask = (owned >= 0).reshape(owned.shape + (1,) * (xb.ndim - 1))
-        x_owned = jnp.where(omask, xb[jnp.maximum(owned, 0)], 0.0)
-        # Emulated static all_to_all: recv[u, v, l] = send[v, u, l] — the
-        # exact workspace-gather path of the shard_map executor (send_idx
-        # routes, compact tile_col_local indexing), testable without a
-        # multi-device mesh.
-        smask = (send_idx >= 0).reshape(send_idx.shape + (1,) * (xb.ndim - 1))
-        safe = jnp.maximum(send_idx, 0)
-        send = jnp.where(
-            smask, x_owned[units[:, None, None], safe], 0.0
-        )  # [U(src), U(dst), L, bn(, B)]
-        recv = jnp.swapaxes(send, 0, 1)  # [U(dst), U(src), L, bn(, B)]
+        _, recv = _emulated_exchange(owned, send_idx, xb)
 
         def one_unit(t, r, tcl, recv_u, src, lane):
             ws = recv_u[src, lane]  # [W, bn(, B)] compact workspace
@@ -183,6 +236,52 @@ def make_simulate_fn(
         return partials.sum(axis=0)
 
     return jax.jit(run_selective) if jit else run_selective
+
+
+def _make_simulate_overlap_fn(
+    plan: DevicePlan, op: OverlapPlan, *, jit: bool = False
+) -> Callable[[jax.Array], jax.Array]:
+    """Overlapped vmap path: local tiles contract straight from the
+    owned x shard (no dependency on the emulated all_to_all), halo tiles
+    from the delivered workspace — the same dependency structure the
+    shard_map step exposes to XLA's async collectives."""
+    nrb = plan.num_row_blocks
+    sp = op.selective
+    local_tiles = jnp.asarray(op.local_tiles)
+    local_row = jnp.asarray(op.local_row)
+    local_slot = jnp.asarray(op.local_slot)
+    halo_tiles = jnp.asarray(op.halo_tiles)
+    halo_row = jnp.asarray(op.halo_row)
+    halo_slot = jnp.asarray(op.halo_slot)
+    owned = jnp.asarray(sp.owned)  # [U, per]
+    send_idx = jnp.asarray(sp.send_idx)  # [U, U, L]
+    recv_src = jnp.asarray(sp.recv_src)
+    recv_lane = jnp.asarray(sp.recv_lane)
+
+    def run_overlap(xb: jax.Array) -> jax.Array:
+        x_owned, recv = _emulated_exchange(owned, send_idx, xb)
+
+        def one_unit(lt, lr, ls, ht, hr, hs, x_own_u, recv_u, src, lane):
+            # Local partial first — depends only on x_own_u.
+            y_local = _unit_spmm(lt, lr, x_own_u[ls], nrb)
+            ws = recv_u[src, lane]  # [W, bn(, B)] compact workspace
+            return y_local + _unit_spmm(ht, hr, ws[hs], nrb)
+
+        partials = jax.vmap(one_unit)(
+            local_tiles,
+            local_row,
+            local_slot,
+            halo_tiles,
+            halo_row,
+            halo_slot,
+            x_owned,
+            recv,
+            recv_src,
+            recv_lane,
+        )
+        return partials.sum(axis=0)
+
+    return jax.jit(run_overlap) if jit else run_overlap
 
 
 def pmvc_simulate(plan: DevicePlan, x: np.ndarray) -> np.ndarray:
@@ -201,6 +300,15 @@ def pmvc_simulate_selective(
     return unblock_y(make_simulate_fn(plan, sp)(xb), plan.shape[0])
 
 
+def pmvc_simulate_overlap(
+    plan: DevicePlan, op: OverlapPlan, x: np.ndarray
+) -> np.ndarray:
+    """vmap execution of the *overlapped* local/halo exchange on a single
+    host — the oracle for the pipelined shard_map step (DESIGN.md §9)."""
+    xb = jnp.asarray(pad_x(np.asarray(x, np.float32), plan.num_col_blocks, plan.bn))
+    return unblock_y(make_simulate_fn(plan, op)(xb), plan.shape[0])
+
+
 def make_unit_mesh(num_units: int) -> Mesh:
     """Flat mesh over all local devices; the (node, core) structure of the
     plan is metadata — hierarchical collectives are an optimization knob."""
@@ -217,13 +325,26 @@ def make_pmvc_step(
     plan: DevicePlan,
     mesh: Mesh,
     *,
-    selective: Optional[SelectivePlan] = None,
+    selective: ExchangePlan = None,
+    overlap: Optional[bool] = None,
 ) -> Callable[..., jax.Array]:
     """Build the jitted distributed PMVC step.
 
     Replicated mode: ``step(tiles, tile_row, tile_col, x_blocks)``.
     Selective mode: ``step(tiles, tile_row, tile_col_local, x_owned,
     send_idx, recv_src, recv_lane)`` with x block-col-sharded.
+    Overlap mode (``overlap=True``, or ``selective`` already an
+    :class:`OverlapPlan`): ``step(local_tiles, local_row, local_slot,
+    halo_tiles, halo_row, halo_slot, x_owned, send_idx, recv_src,
+    recv_lane)`` — the step *issues the all_to_all first*, contracts the
+    local tiles (which only read the unit's own x shard), then the halo
+    tiles from the delivered workspace, so XLA's async collectives can
+    hide the transfer behind the local contraction (DESIGN.md §9). The
+    step closes over shapes only — the caller supplies the
+    :class:`OverlapPlan`'s arrays at call time (build one with
+    :func:`repro.pmvc.plan_device.build_overlap_plan`). Passing
+    ``overlap=False`` with an :class:`OverlapPlan` runs its embedded
+    selective schedule blocking.
 
     x blocks may carry a trailing batch axis (``[NCB, bn, B]`` /
     ``[U, per, bn, B]``); one all_to_all then moves all B vectors.
@@ -231,6 +352,48 @@ def make_pmvc_step(
     on shape, so one step serves every batch size.
     """
     nrb = plan.num_row_blocks
+    if overlap is None:
+        overlap = isinstance(selective, OverlapPlan)
+    if not overlap and isinstance(selective, OverlapPlan):
+        selective = selective.selective
+    if overlap:
+        # The step closes over shapes only — the caller supplies the
+        # OverlapPlan arrays (see repro.api.executors.shard_map_executor).
+
+        def step_overlap(
+            local_tiles,
+            local_row,
+            local_slot,
+            halo_tiles,
+            halo_row,
+            halo_slot,
+            x_owned,
+            send_idx,
+            recv_src,
+            recv_lane,
+        ):
+            # x_owned: [1, per, bn(, B)] local shard; *_tiles/*_row/*_slot
+            # and the schedule arrays are [1, ...] local unit slices.
+            x_local = x_owned[0]
+            # Collective issued before any FLOP: nothing below depends on
+            # `recv` until the halo contraction, so the local partial can
+            # execute while the transfer is in flight.
+            recv = _send_all_to_all(x_local, send_idx[0])
+            y_local = _unit_spmm(
+                local_tiles[0], local_row[0], x_local[local_slot[0]], nrb
+            )
+            ws = recv[recv_src[0], recv_lane[0]]  # [W, bn(, B)] workspace
+            y = y_local + _unit_spmm(halo_tiles[0], halo_row[0], ws[halo_slot[0]], nrb)
+            return jax.lax.psum(y, "unit")
+
+        return jax.jit(
+            _shard_map(
+                step_overlap,
+                mesh=mesh,
+                in_specs=(P("unit"),) * 10,
+                out_specs=P(),
+            )
+        )
 
     if selective is None:
 
@@ -250,14 +413,7 @@ def make_pmvc_step(
 
     def step_selective(tiles, tile_row, tile_col_local, x_owned, send_idx, recv_src, recv_lane):
         # x_owned: [1, per, bn(, B)] local; send_idx: [1, U, L]; recv_*: [1, W].
-        x_local = x_owned[0]
-        idx = send_idx[0]  # [U, L]
-        safe = jnp.maximum(idx, 0)
-        mask = (idx >= 0).reshape(idx.shape + (1,) * (x_local.ndim - 1))
-        my_send = jnp.where(mask, x_local[safe], 0.0)  # [U, L, bn(, B)]
-        recv = jax.lax.all_to_all(
-            my_send, "unit", split_axis=0, concat_axis=0, tiled=False
-        )  # [U, L, bn(, B)]; recv[v] = blocks v sent to me
+        recv = _send_all_to_all(x_owned[0], send_idx[0])
         ws = recv[recv_src[0], recv_lane[0]]  # [W, bn(, B)] compact workspace
         y_part = _unit_spmm(tiles[0], tile_row[0], ws[tile_col_local[0]], nrb)
         return jax.lax.psum(y_part, "unit")
@@ -292,33 +448,49 @@ def _message_counts(plan: DevicePlan, selective: Optional[SelectivePlan]) -> int
 
 def phase_costs(
     plan: DevicePlan,
-    selective: Optional[SelectivePlan] = None,
+    selective: ExchangePlan = None,
     bytes_per: int = 4,
     batch: int = 1,
 ) -> Dict[str, float]:
-    """Analytic per-phase volumes for the benchmark tables (paper ch.4).
+    """Analytic per-phase volumes and model times for the benchmark
+    tables (paper ch.4; overlap model DESIGN.md §9).
 
     ``batch`` is the SpMM width B: payload volumes scale with B while
     the per-message overhead (``MESSAGE_OVERHEAD_BYTES`` × messages) is
     paid once per exchange — so the ``*_per_rhs`` keys shrink as B
     grows, the amortization the batch-first refactor buys.
+
+    Time terms (seconds under the ``MODEL_*`` α-β-peak constants; only
+    ratios are meaningful): ``t_scatter`` / ``t_gather`` are the wire
+    times, ``t_compute`` the padded per-unit contraction. When
+    ``selective`` is an :class:`OverlapPlan` the dict additionally
+    carries the pipelined model — ``t_local`` / ``t_halo`` (the two
+    contraction phases), ``t_iter_overlap = max(t_scatter, t_local) +
+    t_halo + t_gather`` vs ``t_iter_blocking = t_scatter + t_compute +
+    t_gather``, ``overlap_efficiency = min(t_scatter, t_local) /
+    t_scatter`` (fraction of the exchange hidden behind local work) and
+    the projected ``overlap_speedup``.
     """
+    op = selective if isinstance(selective, OverlapPlan) else None
+    sp = op.selective if op is not None else selective
     u = plan.num_units
     b = max(int(batch), 1)
     blk = plan.bm * plan.bn * bytes_per
     scatter_naive = (u - 1) * plan.num_col_blocks * plan.bn * bytes_per * b
     scatter = (
-        selective.wire_blocks * plan.bn * bytes_per * b
-        if selective
-        else scatter_naive
+        sp.wire_blocks * plan.bn * bytes_per * b if sp is not None else scatter_naive
     )
-    msgs = _message_counts(plan, selective)
+    msgs = _message_counts(plan, sp)
     overhead = msgs * MESSAGE_OVERHEAD_BYTES
     flops = 2.0 * u * plan.t * plan.bm * plan.bn * b  # padded (realized) FLOPs
     useful = 2.0 * float(plan.real_tiles.sum()) * plan.bm * plan.bn * b
     gather = u * plan.num_row_blocks * plan.bm * bytes_per * b  # psum volume
     gather_overhead = u * MESSAGE_OVERHEAD_BYTES
-    return {
+    t_scatter = float(scatter + overhead) / MODEL_LINK_BYTES_PER_S
+    t_gather = float(gather + gather_overhead) / MODEL_LINK_BYTES_PER_S
+    # Units run the padded tile count in lockstep → per-unit time.
+    t_compute = 2.0 * plan.t * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
+    out = {
         "batch": float(b),
         "scatter_bytes": float(scatter),
         "scatter_bytes_naive": float(scatter_naive),
@@ -331,4 +503,31 @@ def phase_costs(
         "gather_bytes": float(gather),
         "gather_bytes_per_rhs": float(gather + gather_overhead) / b,
         "tile_bytes_resident": float(u * plan.t * blk),
+        "t_scatter": t_scatter,
+        "t_gather": t_gather,
+        "t_compute": t_compute,
+        "t_iter_blocking": t_scatter + t_compute + t_gather,
     }
+    if op is None:
+        return out
+    # Pipelined model: the halo payload is exactly the wire volume (the
+    # self-routed owned blocks never leave the unit); local x bytes are
+    # the owned-and-referenced blocks read straight from the shard.
+    diag = np.arange(op.num_units)
+    local_blocks = int((op.selective.send_idx[diag, diag] >= 0).sum())
+    t_local = 2.0 * op.t_local * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
+    t_halo = 2.0 * op.t_halo * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
+    hidden = min(t_scatter, t_local)
+    out.update(
+        {
+            "halo_bytes": float(scatter),
+            "local_x_bytes": float(local_blocks * plan.bn * bytes_per * b),
+            "local_tile_fraction": op.local_fraction,
+            "t_local": t_local,
+            "t_halo": t_halo,
+            "t_iter_overlap": max(t_scatter, t_local) + t_halo + t_gather,
+            "overlap_efficiency": hidden / t_scatter if t_scatter > 0 else 1.0,
+        }
+    )
+    out["overlap_speedup"] = out["t_iter_blocking"] / out["t_iter_overlap"]
+    return out

@@ -11,17 +11,32 @@ Also builds the **selective-exchange plan** (DESIGN.md §2.2): with x
 sharded by block-column over units, a static all_to_all send/receive
 schedule moves only the x blocks each unit actually needs — the paper's
 ``C_Xk`` fan-out volume realized on a TPU mesh.
+
+The **overlap plan** (DESIGN.md §9) refines the selective plan with a
+plan-time split of every unit's tiles into a *local* set (x block owned
+by the unit — contractable while the all_to_all is in flight) and a
+*halo* set (x block delivered by the exchange), so the runtime can
+pipeline the exchange behind the local contraction.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
+from repro.sparse.bell import split_tiles_local_halo
 from repro.sparse.formats import COO
 
-__all__ = ["DevicePlan", "SelectivePlan", "pack_units", "build_selective_plan"]
+__all__ = [
+    "DevicePlan",
+    "SelectivePlan",
+    "OverlapPlan",
+    "ExchangePlan",
+    "pack_units",
+    "build_selective_plan",
+    "build_overlap_plan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +109,117 @@ class SelectivePlan:
     def volume_ratio(self) -> float:
         """Realized / all-gather fan-out volume (<1 == paper's FR_X win)."""
         return self.wire_blocks / max(self.naive_blocks, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """Selective plan + the plan-time local/halo tile split (DESIGN.md §9).
+
+    Every real tile of the :class:`DevicePlan` lands in exactly one of
+    two padded stacked sets:
+
+    * **local** — ``tile_col`` is owned by the tile's unit; the
+      contraction reads ``x_owned[u][local_slot]`` and needs no
+      communication, so the runtime schedules it *while the all_to_all
+      is in flight*.
+    * **halo** — ``tile_col`` arrives with the exchange; ``halo_slot``
+      indexes the same compact W-block workspace the selective executor
+      gathers from (``selective.tile_col_local`` semantics).
+
+    Padding entries are all-zero tiles (slot/row 0), contributing
+    nothing — the same trick the blocking path uses, so the split costs
+    only the extra padding to the two per-set maxima.
+    """
+
+    selective: SelectivePlan
+    local_tiles: np.ndarray  # [U, TL, bm, bn] f32
+    local_row: np.ndarray  # [U, TL] int32 — global block-row
+    local_slot: np.ndarray  # [U, TL] int32 — slot into owned[u]
+    halo_tiles: np.ndarray  # [U, TH, bm, bn] f32
+    halo_row: np.ndarray  # [U, TH] int32 — global block-row
+    halo_slot: np.ndarray  # [U, TH] int32 — slot into the W workspace
+    local_counts: np.ndarray  # [U] real local tiles per unit
+    halo_counts: np.ndarray  # [U] real halo tiles per unit
+
+    @property
+    def num_units(self) -> int:
+        return self.selective.num_units
+
+    @property
+    def t_local(self) -> int:
+        """Padded local tiles per unit (the synchronized local phase)."""
+        return int(self.local_tiles.shape[1])
+
+    @property
+    def t_halo(self) -> int:
+        """Padded halo tiles per unit (the post-exchange phase)."""
+        return int(self.halo_tiles.shape[1])
+
+    @property
+    def local_fraction(self) -> float:
+        """Real local tiles / real tiles — how much work the exchange
+        can hide behind (1.0 == fully local, nothing to overlap)."""
+        tot = int(self.local_counts.sum() + self.halo_counts.sum())
+        return float(self.local_counts.sum() / tot) if tot else 1.0
+
+
+# An exchange plan argument, as every executor understands it: None ==
+# replicated, SelectivePlan == the blocking selective all_to_all,
+# OverlapPlan == pipelined local/halo (defined once, next to the plan
+# classes; repro.pmvc.dist and repro.api re-export it).
+ExchangePlan = Optional[Union[SelectivePlan, OverlapPlan]]
+
+
+def build_overlap_plan(
+    plan: DevicePlan, selective: Optional[SelectivePlan] = None
+) -> OverlapPlan:
+    """Split every unit's tiles into local/halo sets over ``selective``'s
+    x ownership (derived from ``plan`` when not supplied)."""
+    sp = selective if selective is not None else build_selective_plan(plan)
+    u_n = plan.num_units
+    ncb = plan.num_col_blocks
+    local_of_block = np.zeros(ncb, dtype=np.int32)
+    for u in range(u_n):
+        for slot, g in enumerate(sp.owned[u]):
+            if g >= 0:
+                local_of_block[g] = slot
+
+    splits = [
+        split_tiles_local_halo(plan.tile_col[u], int(plan.real_tiles[u]), sp.owned[u])
+        for u in range(u_n)
+    ]
+    local_counts = np.array([s[0].shape[0] for s in splits], dtype=np.int64)
+    halo_counts = np.array([s[1].shape[0] for s in splits], dtype=np.int64)
+    tl = max(int(local_counts.max(initial=0)), 1)
+    th = max(int(halo_counts.max(initial=0)), 1)
+
+    bm, bn = plan.bm, plan.bn
+    local_tiles = np.zeros((u_n, tl, bm, bn), dtype=np.float32)
+    local_row = np.zeros((u_n, tl), dtype=np.int32)
+    local_slot = np.zeros((u_n, tl), dtype=np.int32)
+    halo_tiles = np.zeros((u_n, th, bm, bn), dtype=np.float32)
+    halo_row = np.zeros((u_n, th), dtype=np.int32)
+    halo_slot = np.zeros((u_n, th), dtype=np.int32)
+    for u, (loc, halo) in enumerate(splits):
+        k = loc.shape[0]
+        local_tiles[u, :k] = plan.tiles[u, loc]
+        local_row[u, :k] = plan.tile_row[u, loc]
+        local_slot[u, :k] = local_of_block[plan.tile_col[u, loc]]
+        k = halo.shape[0]
+        halo_tiles[u, :k] = plan.tiles[u, halo]
+        halo_row[u, :k] = plan.tile_row[u, halo]
+        halo_slot[u, :k] = sp.tile_col_local[u, halo]
+    return OverlapPlan(
+        selective=sp,
+        local_tiles=local_tiles,
+        local_row=local_row,
+        local_slot=local_slot,
+        halo_tiles=halo_tiles,
+        halo_row=halo_row,
+        halo_slot=halo_slot,
+        local_counts=local_counts,
+        halo_counts=halo_counts,
+    )
 
 
 def pack_units(

@@ -24,7 +24,14 @@ import numpy as np
 
 from repro.sparse.formats import COO
 
-__all__ = ["BellShard", "BellMatrix", "pack_bell", "tile_counts", "pad_x_blocks"]
+__all__ = [
+    "BellShard",
+    "BellMatrix",
+    "pack_bell",
+    "tile_counts",
+    "pad_x_blocks",
+    "split_tiles_local_halo",
+]
 
 
 def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:
@@ -48,6 +55,36 @@ def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:
     xp = np.zeros((b, num_col_blocks * bn), dtype=np.float32)
     xp[:, :n] = x
     return np.moveaxis(xp.reshape(b, num_col_blocks, bn), 0, -1)
+
+
+def split_tiles_local_halo(
+    tile_col: np.ndarray,
+    num_real: int,
+    owned_blocks: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Partition one shard's *real* tiles into the **local** set (tile
+    column's x block is owned by the shard's unit — computable before any
+    exchange completes) and the **halo** set (x block arrives with the
+    selective all_to_all). DESIGN.md §9: the plan-time split behind the
+    overlapped execution mode.
+
+    ``tile_col`` is the shard's ``[T]`` global block-col array (entries at
+    index ≥ ``num_real`` are padding and ignored); ``owned_blocks`` lists
+    the global block-cols the unit owns (−1 entries are padding).
+
+    Returns ``(local_idx, halo_idx)`` — int32 tile indices, each sorted
+    ascending, that exactly partition ``arange(num_real)``: their union
+    covers every real tile, they are disjoint, and every ``local_idx``
+    tile references an owned x block (every ``halo_idx`` tile a remote
+    one).
+    """
+    k = int(num_real)
+    tc = np.asarray(tile_col)[:k]
+    owned = np.asarray(owned_blocks).reshape(-1)
+    owned = owned[owned >= 0]
+    is_local = np.isin(tc, owned)
+    idx = np.arange(k, dtype=np.int32)
+    return idx[is_local], idx[~is_local]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,10 +44,10 @@ def combo_session(request, problem):
     return distribute(a, topology=TOPO, combo=request.param, exchange="selective")
 
 
-@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("exchange", ["replicated", "selective", "overlap"])
 @pytest.mark.parametrize("executor", ["simulate", "reference"])
 def test_equivalence_sweep(combo_session, problem, exchange, executor):
-    """4 combos × 2 exchanges × 2 executors pinned against csr.matvec."""
+    """4 combos × 3 exchanges × 2 executors pinned against csr.matvec."""
     _, x, y_ref = problem
     sess = combo_session.with_exchange(exchange)
     y = sess.spmv(x, executor=executor)
@@ -55,7 +55,7 @@ def test_equivalence_sweep(combo_session, problem, exchange, executor):
     assert _rel_err(y, y_ref) < 1e-5, (sess.combo, exchange, executor)
 
 
-@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("exchange", ["replicated", "selective", "overlap"])
 @pytest.mark.parametrize("executor", ["simulate", "reference"])
 def test_batched_sweep_rows_equal_single_calls(
     combo_session, problem, exchange, executor
@@ -91,7 +91,7 @@ def test_topology_unit_mapping():
 def test_builtin_registries_populated():
     for name in COMBOS + ("nezgt", "hyper"):
         assert name in PARTITIONERS
-    assert set(EXCHANGES.names()) >= {"replicated", "selective"}
+    assert set(EXCHANGES.names()) >= {"replicated", "selective", "overlap"}
     assert set(EXECUTORS.names()) >= {"simulate", "shard_map", "reference"}
     assert set(SOLVERS.names()) >= {"power_iteration", "jacobi", "pagerank", "cg"}
 
@@ -139,6 +139,49 @@ def test_with_executor_shares_compiled_state(combo_session, problem):
     )
     with pytest.raises(KeyError, match="unknown executor"):
         combo_session.with_executor("gpu-magic")
+
+
+def test_with_executor_preserves_exchange_strategy(problem):
+    """Re-derivation semantics: `with_executor` keeps the exchange name
+    AND the planned exchange object (no re-planning), while
+    `with_exchange` re-plans and starts with a cold closure cache."""
+    a, x, y_ref = problem
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HC", exchange="overlap")
+    for name in ("reference", "simulate"):
+        derived = sess.with_executor(name)
+        assert derived.executor == name
+        assert derived.exchange == "overlap"
+        assert derived.selective is sess.selective  # shared plan, not re-derived
+        assert derived._spmv_cache is sess._spmv_cache
+        assert _rel_err(derived.spmv(x), y_ref) < 1e-5
+    # Chained re-derivation: exchange swap re-plans and drops the cache...
+    sess.spmv(x)  # populate the cache first
+    swapped = sess.with_exchange("selective")
+    assert swapped.exchange == "selective"
+    assert swapped.selective is not sess.selective
+    assert swapped._spmv_cache is not sess._spmv_cache
+    assert len(swapped._spmv_cache) == 0
+    # ...and a further with_executor inherits the swapped exchange.
+    chained = swapped.with_executor("reference")
+    assert chained.exchange == "selective"
+    assert chained.selective is swapped.selective
+    assert _rel_err(chained.spmv(x), y_ref) < 1e-5
+
+
+def test_overlap_matches_blocking_exchanges(combo_session, problem):
+    """Acceptance: the overlap path is bit-compatible (fp32 tolerance)
+    with both blocking exchanges on every combo, B ∈ {1, 8}."""
+    _, x, _ = problem
+    xs = np.stack([np.roll(x, 3 * i).astype(np.float32) for i in range(8)])
+    overlap = combo_session.with_exchange("overlap")
+    for xin in (x, xs):
+        y_o = overlap.spmv(xin)
+        for other in ("replicated", "selective"):
+            y_b = combo_session.with_exchange(other).spmv(xin)
+            np.testing.assert_allclose(
+                y_o, y_b, rtol=1e-5, atol=1e-4,
+                err_msg=f"{combo_session.combo}/overlap vs {other}",
+            )
 
 
 def _spd_session(n=96, seed=3):
@@ -227,7 +270,7 @@ _SUBPROC = textwrap.dedent(
     xs = np.random.default_rng(2).standard_normal((4, a.shape[1])).astype(np.float32)
     csr = csr_from_coo(a)
     ys_ref = np.stack([csr.matvec(xs[i]) for i in range(4)])
-    for exchange in ("replicated", "selective"):
+    for exchange in ("replicated", "selective", "overlap"):
         sess = distribute(a, topology=Topology(2, 2), combo="NL-HC",
                           exchange=exchange, executor="shard_map")
         y = sess.spmv(x)

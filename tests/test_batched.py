@@ -84,7 +84,7 @@ def test_kernel_spmm_matches_looped_spmv():
 # -- API layer: batched == looped through every executor ---------------------
 
 
-@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+@pytest.mark.parametrize("exchange", ["replicated", "selective", "overlap"])
 @pytest.mark.parametrize("executor", ["simulate", "reference"])
 def test_spmm_batch_rows_equal_single_calls(problem, exchange, executor):
     a, xs, y_ref = problem
@@ -98,12 +98,13 @@ def test_spmm_batch_rows_equal_single_calls(problem, exchange, executor):
     assert err < 1e-5, (exchange, executor, err)
 
 
-def test_device_spmm_traceable_and_matches(problem):
+@pytest.mark.parametrize("exchange", ["selective", "overlap"])
+def test_device_spmm_traceable_and_matches(problem, exchange):
     import jax
     import jax.numpy as jnp
 
     a, xs, y_ref = problem
-    sess = distribute(a, topology=TOPO, combo="NL-HL", exchange="selective")
+    sess = distribute(a, topology=TOPO, combo="NL-HL", exchange=exchange)
     mv = sess.device_spmm()
     y = np.asarray(jax.jit(mv)(jnp.asarray(xs)))
     err = np.abs(y - y_ref).max() / np.abs(y_ref).max()
@@ -215,6 +216,18 @@ def test_device_loop_matches_host_loop(solver, kw):
     np.testing.assert_allclose(
         dev.residuals, host.residuals, rtol=1e-3, atol=1e-3
     )
+
+
+def test_device_loop_on_overlap_exchange():
+    """Solver drivers (host and lax.while_loop) run unchanged on the
+    pipelined exchange and agree with the blocking one."""
+    sess = _spd_session().with_exchange("overlap")
+    blocking = _spd_session().solve("jacobi", iters=10)
+    host = sess.solve("jacobi", iters=10)
+    dev = sess.solve("jacobi", iters=10, device_loop=True)
+    np.testing.assert_allclose(host.x, blocking.x, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dev.x, host.x, rtol=1e-4, atol=1e-4)
+    assert dev.iters_run == host.iters_run == 10
 
 
 def test_device_loop_tol_early_stop():

@@ -1,0 +1,124 @@
+"""Property tests for the local/halo tile split behind the overlapped
+exchange (DESIGN.md §9).
+
+For random matrices and topologies, ``split_tiles_local_halo`` must be
+an *exact partition* of every unit's real tiles — local ∪ halo covers
+all of them, local ∩ halo is empty — and no local tile may reference an
+x block the unit does not own (nor a halo tile one it does). The
+:class:`OverlapPlan` built on top must carry the same split (counts,
+zero padding) and reproduce the blocking executors bit-for-bit at fp32
+tolerance.
+
+Hypothesis drives the randomized shapes when available (CI installs
+it; `_hypothesis_compat` skips otherwise); a seeded sweep below covers
+the same properties in the offline container.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import Topology, distribute
+from repro.sparse.bell import split_tiles_local_halo
+from repro.sparse.generate import banded_coo, powerlaw_coo, random_coo
+
+COMBOS = ("NL-HL", "NL-HC", "NC-HL", "NC-HC")
+
+
+def _check_split_properties(dp, sp):
+    """The exact-partition + ownership properties, per unit."""
+    for u in range(dp.num_units):
+        k = int(dp.real_tiles[u])
+        local, halo = split_tiles_local_halo(dp.tile_col[u], k, sp.owned[u])
+        owned = set(int(g) for g in sp.owned[u] if g >= 0)
+        # Exact partition: union covers every real tile, disjoint.
+        both = np.concatenate([local, halo])
+        np.testing.assert_array_equal(np.sort(both), np.arange(k))
+        assert np.intersect1d(local, halo).size == 0
+        # Ownership: local tiles only reference owned x blocks,
+        # halo tiles only non-owned ones.
+        assert all(int(g) in owned for g in dp.tile_col[u, local])
+        assert all(int(g) not in owned for g in dp.tile_col[u, halo])
+
+
+def _check_overlap_plan(dp, op):
+    """OverlapPlan mirrors the split and pads with zero tiles."""
+    np.testing.assert_array_equal(
+        op.local_counts + op.halo_counts, dp.real_tiles
+    )
+    assert op.t_local >= int(op.local_counts.max(initial=0))
+    assert op.t_halo >= int(op.halo_counts.max(initial=0))
+    for u in range(dp.num_units):
+        kl, kh = int(op.local_counts[u]), int(op.halo_counts[u])
+        assert not op.local_tiles[u, kl:].any()  # zero padding
+        assert not op.halo_tiles[u, kh:].any()
+        # Real content is preserved: the split moves every real tile's
+        # values into exactly one of the two sets.
+        moved = float(
+            op.local_tiles[u].astype(np.float64).sum()
+            + op.halo_tiles[u].astype(np.float64).sum()
+        )
+        ref = float(dp.tiles[u].astype(np.float64).sum())
+        assert moved == pytest.approx(ref, rel=1e-6, abs=1e-6)
+
+
+def _run_case(a, topo, combo, block):
+    sess = distribute(a, topology=topo, combo=combo, exchange="overlap", block=block)
+    dp, op = sess.device_plan, sess.selective
+    _check_split_properties(dp, op.selective)
+    _check_overlap_plan(dp, op)
+    # Parity: overlapped execution equals the blocking selective one.
+    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    y_overlap = sess.spmv(x)
+    y_blocking = sess.with_exchange("selective").spmv(x)
+    np.testing.assert_allclose(y_overlap, y_blocking, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=48, max_value=400),
+    density=st.integers(min_value=2, max_value=12),
+    nodes=st.integers(min_value=2, max_value=4),
+    cores=st.integers(min_value=1, max_value=3),
+    combo_i=st.integers(min_value=0, max_value=3),
+    block=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_split_partition_property(n, density, nodes, cores, combo_i, block, seed):
+    a = random_coo(n, n * density, seed=seed)
+    _run_case(a, Topology(nodes, cores), COMBOS[combo_i], block)
+
+
+@pytest.mark.parametrize(
+    "gen,n,nnz,topo,combo,block",
+    [
+        (random_coo, 128, 1200, Topology(2, 2), "NL-HL", 16),
+        (random_coo, 333, 4000, Topology(3, 2), "NL-HC", 8),
+        (banded_coo, 256, 3000, Topology(2, 3), "NC-HL", 16),
+        (banded_coo, 191, 2000, Topology(2, 2), "nezgt", 16),
+        (powerlaw_coo, 300, 4500, Topology(2, 4), "NC-HC", 16),
+        (powerlaw_coo, 222, 2200, Topology(2, 2), "hyper", 8),
+    ],
+)
+def test_split_partition_seeded_sweep(gen, n, nnz, topo, combo, block):
+    """Offline-friendly instantiation of the same properties."""
+    _run_case(gen(n, nnz, seed=n + nnz), topo, combo, block)
+
+
+def test_split_handles_padding_and_empty_sets():
+    """Degenerate inputs: all-local, all-halo, zero real tiles."""
+    tile_col = np.array([3, 1, 3, 2], dtype=np.int32)
+    # All owned -> all local.
+    local, halo = split_tiles_local_halo(tile_col, 4, np.array([1, 2, 3]))
+    np.testing.assert_array_equal(local, [0, 1, 2, 3])
+    assert halo.size == 0
+    # None owned (and -1 padding ignored) -> all halo.
+    local, halo = split_tiles_local_halo(tile_col, 4, np.array([-1, 7]))
+    assert local.size == 0
+    np.testing.assert_array_equal(halo, [0, 1, 2, 3])
+    # Padding tiles beyond num_real never appear in either set.
+    local, halo = split_tiles_local_halo(tile_col, 2, np.array([3]))
+    np.testing.assert_array_equal(local, [0])
+    np.testing.assert_array_equal(halo, [1])
+    # Zero real tiles -> two empty sets.
+    local, halo = split_tiles_local_halo(tile_col, 0, np.array([1]))
+    assert local.size == 0 and halo.size == 0

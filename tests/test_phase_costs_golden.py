@@ -1,0 +1,154 @@
+"""Golden-value regression tests for :func:`repro.pmvc.dist.phase_costs`.
+
+A hand-built 8×8 matrix with an explicit element→unit assignment pins
+*every* scatter/gather/local/halo byte and time term to exact,
+hand-derived values, so future cost-model edits cannot silently drift
+(the fields were previously asserted only relationally).
+
+Layout under ``bm = bn = 2`` (4 block-rows × 4 block-cols, 2 units):
+
+* unit 0 owns block-rows {0, 1} and tiles (0,0) (0,2) (1,1) (1,3);
+* unit 1 owns block-rows {2, 3} and tiles (2,2) (2,0) (3,3) (3,1);
+* x ownership: unit 0 holds block-cols {0, 1}, unit 1 holds {2, 3}.
+
+So each unit has 4 real tiles — 2 local, 2 halo — and the selective
+schedule moves 4 blocks across the wire (2 per direction ⇒ 2 messages).
+"""
+import numpy as np
+import pytest
+
+from repro.pmvc.dist import (
+    MESSAGE_OVERHEAD_BYTES,
+    MODEL_LINK_BYTES_PER_S,
+    MODEL_UNIT_FLOPS_PER_S,
+    phase_costs,
+)
+from repro.pmvc.plan_device import (
+    build_overlap_plan,
+    build_selective_plan,
+    pack_units,
+)
+from repro.sparse.formats import COO
+
+
+def _fixed_plan():
+    row = np.array([0, 1, 2, 3, 4, 5, 6, 7, 0, 2, 4, 6])
+    col = np.array([0, 1, 2, 3, 4, 5, 6, 7, 4, 6, 0, 2])
+    val = np.arange(1, 13, dtype=np.float32)
+    a = COO((8, 8), row, col, val)
+    elem_unit = (row >= 4).astype(np.int64)  # rows 0–3 → unit 0, 4–7 → unit 1
+    return pack_units(a, elem_unit, 2, 2, 2)
+
+
+@pytest.fixture(scope="module")
+def plans():
+    dp = _fixed_plan()
+    sp = build_selective_plan(dp)
+    op = build_overlap_plan(dp, sp)
+    return dp, sp, op
+
+
+def test_fixed_plan_structure(plans):
+    dp, sp, op = plans
+    assert dp.t == 4
+    np.testing.assert_array_equal(dp.real_tiles, [4, 4])
+    assert sp.wire_blocks == 4
+    np.testing.assert_array_equal(op.local_counts, [2, 2])
+    np.testing.assert_array_equal(op.halo_counts, [2, 2])
+    assert (op.t_local, op.t_halo) == (2, 2)
+    assert op.local_fraction == 0.5
+
+
+def test_model_constants_pinned():
+    """The time terms below bake these in — changing a constant is a
+    deliberate cost-model change and must update the goldens."""
+    assert MESSAGE_OVERHEAD_BYTES == 512
+    assert MODEL_LINK_BYTES_PER_S == 1.25e9
+    assert MODEL_UNIT_FLOPS_PER_S == 5.0e10
+
+
+def test_phase_costs_selective_golden(plans):
+    dp, sp, _ = plans
+    c = phase_costs(dp, sp)
+    expected = {
+        "batch": 1.0,
+        # 4 wire blocks × bn=2 × 4 bytes.
+        "scatter_bytes": 32.0,
+        # (U−1)=1 × NCB=4 × bn=2 × 4 bytes.
+        "scatter_bytes_naive": 32.0,
+        "scatter_messages": 2.0,
+        "scatter_overhead_bytes": 1024.0,
+        "scatter_bytes_per_rhs": 1056.0,
+        # 2 × U=2 × T=4 × bm×bn=4.
+        "compute_flops": 64.0,
+        "useful_flops": 64.0,
+        "flop_efficiency": 1.0,
+        # U=2 × NRB=4 × bm=2 × 4 bytes.
+        "gather_bytes": 64.0,
+        "gather_bytes_per_rhs": 64.0 + 2 * 512.0,
+        # U=2 × T=4 × 2×2×4 bytes.
+        "tile_bytes_resident": 128.0,
+        "t_scatter": 1056.0 / 1.25e9,
+        "t_gather": 1088.0 / 1.25e9,
+        "t_compute": 32.0 / 5.0e10,
+        "t_iter_blocking": 1056.0 / 1.25e9 + 1088.0 / 1.25e9 + 32.0 / 5.0e10,
+    }
+    assert set(c) == set(expected)
+    for key, want in expected.items():
+        assert c[key] == pytest.approx(want, rel=1e-12, abs=0.0), key
+
+
+def test_phase_costs_overlap_golden(plans):
+    dp, _, op = plans
+    c = phase_costs(dp, op)
+    t_scatter = 1056.0 / 1.25e9
+    t_local = 16.0 / 5.0e10  # 2 × TL=2 × bm×bn=4 per unit
+    t_halo = 16.0 / 5.0e10
+    t_gather = 1088.0 / 1.25e9
+    t_blocking = t_scatter + 32.0 / 5.0e10 + t_gather
+    t_overlap = max(t_scatter, t_local) + t_halo + t_gather
+    expected = {
+        # The wire payload is exactly the halo fan-out…
+        "halo_bytes": 32.0,
+        # …and 4 owned-and-referenced blocks are read in place.
+        "local_x_bytes": 32.0,
+        "local_tile_fraction": 0.5,
+        "t_local": t_local,
+        "t_halo": t_halo,
+        "t_iter_overlap": t_overlap,
+        "overlap_efficiency": t_local / t_scatter,  # comm-bound case
+        "overlap_speedup": t_blocking / t_overlap,
+    }
+    for key, want in expected.items():
+        assert c[key] == pytest.approx(want, rel=1e-12, abs=0.0), key
+    # The volume terms agree with the embedded selective plan's.
+    sel = phase_costs(dp, op.selective)
+    for key, want in sel.items():
+        assert c[key] == pytest.approx(want, rel=1e-12, abs=0.0), key
+
+
+def test_phase_costs_overlap_batch_scaling(plans):
+    """Payload terms scale with B; per-message overhead does not."""
+    dp, _, op = plans
+    c = phase_costs(dp, op, batch=4)
+    assert c["batch"] == 4.0
+    assert c["scatter_bytes"] == 128.0
+    assert c["scatter_overhead_bytes"] == 1024.0
+    assert c["scatter_bytes_per_rhs"] == (128.0 + 1024.0) / 4
+    assert c["halo_bytes"] == 128.0
+    assert c["local_x_bytes"] == 128.0
+    assert c["t_local"] == pytest.approx(64.0 / 5.0e10, rel=1e-12)
+    assert c["t_scatter"] == pytest.approx(1152.0 / 1.25e9, rel=1e-12)
+    # Still comm-bound: efficiency grows with B as t_local catches up.
+    c1 = phase_costs(dp, op, batch=1)
+    assert c["overlap_efficiency"] > c1["overlap_efficiency"]
+
+
+def test_phase_costs_replicated_has_no_overlap_terms(plans):
+    dp, _, _ = plans
+    c = phase_costs(dp, None)
+    for key in ("t_local", "t_halo", "overlap_efficiency", "halo_bytes"):
+        assert key not in c
+    assert c["scatter_bytes"] == c["scatter_bytes_naive"] == 32.0
+    # all-gather: U×(U−1) messages.
+    assert c["scatter_messages"] == 2.0
