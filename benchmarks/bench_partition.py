@@ -1,24 +1,58 @@
-"""Paper Tables 4.3–4.6: partition quality of the four combinations.
+"""Paper Tables 4.3–4.6 + the PR 4 planning-time benchmark.
 
-For each (matrix × node-count f × combo): LB_nodes, LB_cores, modeled
-scatter/compute/gather phase costs (α-β model — hardware-independent
-comparison, the CPU container cannot reproduce Grid'5000 wall-times),
-plus the hypergraph cut. Partitions run through the
-:mod:`repro.api` partitioner registry (no packing/execution — this is
-the planning-stage benchmark). Emits CSV rows; `summary()` reproduces
-the paper's Table 4.7 win-rate synthesis (claim C4).
+Two benchmarks share this module:
+
+* :func:`run` / :func:`summary` — partition *quality* of the four
+  combinations: for each (matrix × node-count f × combo) LB_nodes,
+  LB_cores, modeled scatter/compute/gather phase costs (α-β model —
+  hardware-independent comparison, the CPU container cannot reproduce
+  Grid'5000 wall-times), plus the hypergraph cut; `summary()`
+  reproduces the paper's Table 4.7 win-rate synthesis (claim C4).
+* :func:`plan_at_scale` — planning *time* at serving scale (DESIGN.md
+  §10): per-phase wall times of ``distribute()`` on a 60k×60k /
+  1.2M-nnz banded matrix (the config whose pre-PR-4 plan cost ~1300
+  warm SpMV iterations), the standalone NEZGT / hypergraph heuristic
+  timings, the plan-cache save / npz-load / in-process-memo times, and
+  the speedups against the recorded pre-refactor seed baseline — all
+  written to ``BENCH_plan.json``.
+
+CLI: ``--quick`` runs a scaled-down planning-time config (CI smoke);
+``--check`` compares the quick time against the committed baseline in
+``BENCH_plan.json`` and exits non-zero on a >3× regression.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
+import tempfile
 import time
 from typing import Dict, Iterable, List
 
 
-from repro.api import Topology, resolve_partitioner
+from repro.api import Topology, distribute, resolve_partitioner
+from repro.api.exchange import EXCHANGES
 from repro.configs.paper_pmvc import COMBOS
+from repro.pmvc.plan_device import pack_units
 from repro.sparse import generate, PAPER_SUITE
+from repro.sparse.generate import banded_coo
 
-__all__ = ["run", "summary"]
+__all__ = ["run", "summary", "plan_at_scale"]
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+
+# The headline planning config: same order of magnitude as the largest
+# serving workloads the ROADMAP targets, banded like the paper's
+# dominant structure class.
+SCALE_CONFIG = dict(n=60_000, nnz=1_200_000, topology=(4, 4), combo="NL-HC",
+                    exchange="selective", block=16, seed=0)
+QUICK_CONFIG = dict(n=8_000, nnz=160_000, topology=(2, 2), combo="NL-HC",
+                    exchange="selective", block=16, seed=0)
+
+# Pre-refactor (commit 8df126e) wall times on the SCALE_CONFIG, measured
+# on the reference container: the Python-loop `_fm_pass`/`_phase2`
+# planning pipeline. The recorded ≥10× acceptance is against these.
+SEED_BASELINE_S = {"distribute_cold": 19.04, "partition": 16.4}
 
 
 def run(
@@ -71,12 +105,202 @@ def summary(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
     return {c: {k: v / n for k, v in w.items()} for c, w in wins.items()}
 
 
-def main() -> None:
+def _time_planning(cfg: Dict) -> Dict:
+    """Per-phase planning times + cache times for one config."""
+    import repro.api.plancache as plancache
+    from repro.core import hypergraph as hg
+    from repro.core.nezgt import nezgt_partition
+
+    a = banded_coo(cfg["n"], cfg["nnz"], seed=cfg["seed"])
+    topo = Topology(*cfg["topology"])
+    out: Dict = {"config": dict(cfg)}
+
+    # Standalone heuristic phases (the two profiled hot spots).
+    w = a.row_counts()
+    t0 = time.perf_counter()
+    nz = nezgt_partition(w, topo.nodes)
+    out["nezgt_s"] = time.perf_counter() - t0
+    out["nezgt_fd"] = int(nz.fd_final)
+    graph = hg.hypergraph_from_coo(a, "rows")
+    t0 = time.perf_counter()
+    res = hg.partition_hypergraph(graph, topo.units, seed=cfg["seed"])
+    out["hyper_s"] = time.perf_counter() - t0
+    out["hyper_cut"] = int(res.cut)
+
+    # The full pipeline, phase by phase.
+    timings: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    part = resolve_partitioner(cfg["combo"])(a, topo, seed=cfg["seed"], timings=timings)
+    t1 = time.perf_counter()
+    dp = pack_units(a, part.elem_unit, topo.units, cfg["block"], cfg["block"])
+    t2 = time.perf_counter()
+    EXCHANGES.get(cfg["exchange"])(dp)
+    t3 = time.perf_counter()
+    out["phases"] = {
+        "partition_s": t1 - t0,
+        **{k: round(v, 4) for k, v in timings.items()},
+        "pack_s": t2 - t1,
+        "exchange_s": t3 - t2,
+    }
+    out["quality"] = {
+        "inter_fd": int(part.inter_fd),
+        "hyper_cut": int(part.hyper_cut),
+        "lb_nodes": round(part.lb_nodes, 4),
+        "lb_cores": round(part.lb_cores, 4),
+    }
+
+    # Cold distribute + the two cache layers (fresh key space per run).
+    with tempfile.TemporaryDirectory() as cache:
+        t0 = time.perf_counter()
+        distribute(a, topology=topo, combo=cfg["combo"], exchange=cfg["exchange"],
+                   block=cfg["block"], seed=cfg["seed"], cache_dir=cache)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        distribute(a, topology=topo, combo=cfg["combo"], exchange=cfg["exchange"],
+                   block=cfg["block"], seed=cfg["seed"], cache_dir=cache)
+        memo = time.perf_counter() - t0
+        plancache.clear_memo()  # simulate a sibling serving process
+        t0 = time.perf_counter()
+        distribute(a, topology=topo, combo=cfg["combo"], exchange=cfg["exchange"],
+                   block=cfg["block"], seed=cfg["seed"], cache_dir=cache)
+        load = time.perf_counter() - t0
+        plancache.clear_memo()
+    out["distribute_cold_s"] = cold
+    out["cache"] = {
+        "memo_s": memo,
+        "npz_load_s": load,
+        "cold_vs_memo": round(cold / max(memo, 1e-9), 1),
+        "cold_vs_npz_load": round(cold / max(load, 1e-9), 1),
+    }
+    return out
+
+
+def plan_at_scale(write: bool = True) -> Dict:
+    """The DESIGN.md §10 planning-time benchmark → ``BENCH_plan.json``.
+
+    The CI regression baseline (``quick_baseline``) is *preserved*, not
+    rewritten: measurements vary per machine, and a fast workstation
+    regenerating the file must not silently tighten the 3× gate every
+    other contributor's CI is compared against. Re-record it explicitly
+    with ``--record-baseline`` (on the reference container).
+    """
+    scale = _time_planning(SCALE_CONFIG)
+    scale["seed_baseline_s"] = SEED_BASELINE_S
+    scale["speedup_vs_seed"] = round(
+        SEED_BASELINE_S["distribute_cold"] / max(scale["distribute_cold_s"], 1e-9), 1
+    )
+    quick = _time_planning(QUICK_CONFIG)
+    doc = {"plan_at_scale": scale, "quick": quick}
+    doc["quick_baseline"] = _load_quick_baseline() or {
+        "distribute_cold_s": quick["distribute_cold_s"],
+        "probe_s": _probe_runner_s(),
+        "recorded_on": "this machine (bootstrap — re-record on the reference container)",
+    }
+    if write:
+        with open(BENCH_PATH, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        print(f"wrote {os.path.normpath(BENCH_PATH)}")
+    print(json.dumps(doc, indent=2, sort_keys=True))
+    return doc
+
+
+def _probe_runner_s() -> float:
+    """Time a fixed numpy workload (the planning pipeline's op mix:
+    argsort + bincount + fancy indexing) — a machine-speed probe so the
+    CI gate compares *ratios*, not one machine's wall-clock against
+    another's. Best of 3."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 50_000, size=2_000_000)
+    w = rng.random(2_000_000)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        order = np.argsort(idx, kind="stable")
+        np.bincount(idx, weights=w, minlength=50_000)
+        w[order[: len(order) // 2]].sum()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _load_quick_baseline() -> Dict | None:
+    try:
+        with open(BENCH_PATH) as fh:
+            return json.load(fh).get("quick_baseline")
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def record_baseline() -> int:
+    """Re-record the CI quick baseline (run on the reference container —
+    the real hostname is stamped so a baseline recorded elsewhere is
+    visible in review)."""
+    import platform
+
+    quick = _time_planning(QUICK_CONFIG)
+    try:
+        with open(BENCH_PATH) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc["quick_baseline"] = {
+        "distribute_cold_s": quick["distribute_cold_s"],
+        "probe_s": _probe_runner_s(),
+        "recorded_on": platform.node() or "unknown-host",
+    }
+    with open(BENCH_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    print(f"recorded quick baseline {doc['quick_baseline']}")
+    return 0
+
+
+def quick_smoke(check: bool) -> int:
+    """CI smoke: quick-config planning time, optionally compared against
+    the committed ``quick_baseline`` (fail on >3× regression). Timing is
+    best-of-2, and the 3× limit is scaled by the runner-speed probe
+    (never *below* 3× — a fast runner must not tighten the gate), so a
+    slow shared CI host doesn't flake the gate."""
+    runs = [_time_planning(QUICK_CONFIG) for _ in range(2)]
+    quick = min(runs, key=lambda r: r["distribute_cold_s"])
+    now = quick["distribute_cold_s"]
+    print(f"quick planning: distribute_cold={now:.3f}s (best of 2) "
+          f"phases={quick['phases']} cache={quick['cache']}")
+    if not check:
+        return 0
+    baseline_doc = _load_quick_baseline()
+    if baseline_doc is None:
+        print("FAIL: no quick_baseline recorded in BENCH_plan.json")
+        return 1
+    baseline = baseline_doc["distribute_cold_s"]
+    speed = max(_probe_runner_s() / baseline_doc.get("probe_s", 1.0), 1.0)
+    limit = 3.0 * baseline * speed
+    print(f"baseline={baseline:.3f}s runner-speed-factor={speed:.2f} "
+          f"limit(3x, scaled)={limit:.3f}s")
+    if now > limit:
+        print(f"FAIL: quick planning regressed {now / (baseline * speed):.1f}x "
+              "over the speed-adjusted baseline")
+        return 1
+    print("OK: within 3x of recorded baseline")
+    return 0
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if "--record-baseline" in args:
+        return record_baseline()
+    if "--quick" in args:
+        return quick_smoke(check="--check" in args)
+    if "--plan-at-scale" in args:
+        plan_at_scale()
+        return 0
     rows = run()
     print("\n# Table 4.7 analogue (win rates)")
     for combo, w in summary(rows).items():
         print(combo, {k: round(v, 2) for k, v in w.items()})
+    plan_at_scale()
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -21,6 +21,9 @@ def main() -> None:
     for combo, w in bench_partition.summary(rows).items():
         print(f"{combo}," + ",".join(f"{k}={v:.2f}" for k, v in w.items()))
 
+    print("\n# === 1b. planning time at scale (DESIGN.md §10) ===")
+    bench_partition.plan_at_scale()
+
     print("\n# === 2. PMVC phase decomposition (Figures 4.16-4.55) ===")
     bench_pmvc.run(json_path=str(Path(__file__).resolve().parent.parent / "BENCH_pmvc.json"))
 

@@ -60,6 +60,7 @@ from repro.api.partitioners import (
     register_partitioner,
     resolve_partitioner,
 )
+from repro.api.plancache import load_session, plan_key, save_session
 from repro.api.registry import Registry
 from repro.api.session import SparseSession, distribute
 from repro.api.solvers import SOLVERS, SolveResult, register_solver
@@ -81,4 +82,7 @@ __all__ = [
     "register_executor",
     "register_solver",
     "resolve_partitioner",
+    "plan_key",
+    "save_session",
+    "load_session",
 ]

@@ -109,8 +109,16 @@ class PartitionResult:
 
 
 def _combo_partitioner(combo: str) -> Callable:
-    def run(a: COO, topology: Topology, *, seed: int = 0) -> PartitionResult:
-        plan = two_level_partition(a, topology.nodes, topology.cores, combo, seed=seed)
+    def run(
+        a: COO,
+        topology: Topology,
+        *,
+        seed: int = 0,
+        timings: Optional[dict] = None,
+    ) -> PartitionResult:
+        plan = two_level_partition(
+            a, topology.nodes, topology.cores, combo, seed=seed, timings=timings
+        )
         elem_unit = topology.unit_of(plan.elem_node, plan.elem_core)
         return PartitionResult(
             name=combo, topology=topology, elem_unit=elem_unit, plan=plan

@@ -1,0 +1,406 @@
+"""Plan persistence: save / load / memoize planned sessions.
+
+The thesis' pipeline is *partition once, iterate many* — yet before this
+module every process re-ran the whole planning pipeline (partition,
+BELL packing, exchange schedule), which even vectorized costs ~10²–10³
+steady-state SpMV iterations. A fleet of serving processes should plan
+**once** and warm-start everywhere.
+
+Three layers, all keyed on :func:`plan_key` — a content hash over
+(matrix bytes + shape, topology, combo, block, exchange strategy, seed,
+partitioner kwargs, format version):
+
+* ``SparseSession.save(path)`` / ``SparseSession.load(path)`` — one
+  ``.npz`` file holding every planning artifact (matrix, partition incl.
+  the two-level plan and its comm stats, device plan, exchange plan)
+  plus a JSON meta entry (``meta.json`` inside the archive) describing
+  scalars and layout. Arrays round-trip bitwise, so a loaded session's
+  ``spmv`` is bit-identical to the saved one's on every executor.
+* ``distribute(..., cache_dir=...)`` — looks up ``<cache_dir>/
+  plan-<key>.npz``; on miss it plans and writes the file. A fresh
+  process pays one file read (~10–100 ms) instead of the full planning
+  pipeline.
+* an in-process memo on the same key — a *second* ``distribute(...,
+  cache_dir=...)`` call in the same process returns a re-wrapped
+  session (plans and the compiled-closure cache shared, exactly
+  :meth:`SparseSession.with_executor` semantics) without touching disk.
+
+The ``.npz`` stores arrays uncompressed: plans are mostly dense f32
+tile payloads where zlib costs seconds and saves little; load time is
+what the serving fleet pays.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import json
+import os
+from typing import Dict, Optional, Tuple, TYPE_CHECKING, Union
+
+import numpy as np
+
+from repro.api.topology import Topology
+from repro.core.combined import CommStats, LevelSpec, TwoLevelPlan
+from repro.pmvc.plan_device import DevicePlan, OverlapPlan, SelectivePlan
+from repro.sparse.formats import COO
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.api.session import SparseSession
+
+__all__ = [
+    "FORMAT_VERSION",
+    "plan_key",
+    "save_session",
+    "load_session",
+    "cached_distribute",
+    "clear_memo",
+]
+
+FORMAT_VERSION = 1
+
+# In-process memo: key -> canonical loaded/planned session, LRU-bounded
+# (a session pins the matrix plus dense f32 tile payloads — tens of MB
+# at serving scale — so a long-lived process planning many distinct
+# matrices must not accumulate them forever). Sessions handed out are
+# re-wraps sharing plans + compiled closures (the with_executor
+# contract), so the memo never aliases mutable per-call state.
+_MEMO_MAX = 8
+_MEMO: "collections.OrderedDict[str, SparseSession]" = collections.OrderedDict()
+
+
+def clear_memo() -> None:
+    """Drop every in-process memoized session (the ``.npz`` files stay).
+    Useful in tests and to release plan memory in long-lived processes."""
+    _MEMO.clear()
+
+
+def _matrix_digest(a: COO) -> bytes:
+    """Digest of the matrix *content* (row/col/val bytes), cached on the
+    COO instance: hashing a multi-MB matrix costs ~10 ms, which would
+    otherwise dominate every in-process memo hit. :class:`COO` is a
+    frozen dataclass treated as immutable throughout the code base — if
+    you mutate its arrays in place anyway, build a fresh COO before
+    planning or the cache will serve stale plans."""
+    cached = getattr(a, "_content_digest", None)
+    if cached is None:
+        h = hashlib.blake2b(digest_size=16)
+        for arr in (a.row, a.col, a.val):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        cached = h.digest()
+        object.__setattr__(a, "_content_digest", cached)
+    return cached
+
+
+def plan_key(
+    a: COO,
+    topology: Topology,
+    combo: str,
+    block: Union[int, Tuple[int, int]],
+    exchange: str,
+    seed: int,
+    partitioner_kw: Optional[dict] = None,
+) -> str:
+    """Content hash identifying one planning run.
+
+    Covers everything the planning pipeline reads: the matrix *content*
+    (shape + row/col/val bytes), the (nodes × cores) topology, the
+    partitioner combo and its kwargs, the (bm, bn) block (an int is
+    normalized to (b, b) exactly as :func:`repro.api.distribute` does,
+    so ``plan_key(..., 16, ...)`` names the same file as
+    ``distribute(..., block=16, cache_dir=...)`` wrote), the exchange
+    strategy, the seed, and the serialization format version. The
+    executor is deliberately excluded — it is runtime state, not plan.
+    """
+    bm, bn = (block, block) if isinstance(block, int) else block
+    h = hashlib.blake2b(digest_size=16)
+    kw = sorted((partitioner_kw or {}).items())
+    h.update(
+        f"v{FORMAT_VERSION}|{a.shape}|{topology.nodes}x{topology.cores}"
+        f"|{combo}|{(bm, bn)}|{exchange}|{seed}|{kw!r}".encode()
+    )
+    h.update(_matrix_digest(a))
+    return h.hexdigest()
+
+
+def _comm_stats_arrays(prefix: str, st: CommStats, out: Dict[str, np.ndarray]) -> None:
+    out[f"{prefix}.nnz"] = st.nnz
+    out[f"{prefix}.c_x"] = st.c_x
+    out[f"{prefix}.c_y"] = st.c_y
+    out[f"{prefix}.fr_x"] = st.fr_x
+
+
+def _comm_stats_from(prefix: str, z) -> CommStats:
+    return CommStats(
+        nnz=z[f"{prefix}.nnz"],
+        c_x=z[f"{prefix}.c_x"],
+        c_y=z[f"{prefix}.c_y"],
+        fr_x=z[f"{prefix}.fr_x"],
+    )
+
+
+def _selective_arrays(prefix: str, sp: SelectivePlan, out: Dict[str, np.ndarray]) -> None:
+    for field in ("owned", "send_idx", "recv_src", "recv_lane", "needed", "tile_col_local"):
+        out[f"{prefix}.{field}"] = getattr(sp, field)
+
+
+def _selective_from(prefix: str, meta: dict, z) -> SelectivePlan:
+    return SelectivePlan(
+        num_units=meta["num_units"],
+        blocks_per_unit=meta["blocks_per_unit"],
+        lanes=meta["lanes"],
+        owned=z[f"{prefix}.owned"],
+        send_idx=z[f"{prefix}.send_idx"],
+        recv_src=z[f"{prefix}.recv_src"],
+        recv_lane=z[f"{prefix}.recv_lane"],
+        needed=z[f"{prefix}.needed"],
+        tile_col_local=z[f"{prefix}.tile_col_local"],
+        wire_blocks=meta["wire_blocks"],
+        naive_blocks=meta["naive_blocks"],
+    )
+
+
+def _selective_meta(sp: SelectivePlan) -> dict:
+    return {
+        "num_units": sp.num_units,
+        "blocks_per_unit": sp.blocks_per_unit,
+        "lanes": sp.lanes,
+        "wire_blocks": sp.wire_blocks,
+        "naive_blocks": sp.naive_blocks,
+    }
+
+
+def save_session(sess: "SparseSession", path: str) -> str:
+    """Serialize every planning artifact of ``sess`` into one ``.npz``.
+
+    Returns the path written (``path``, with ``.npz`` appended by numpy
+    when missing). Not stored: the executor's compiled closures (rebuilt
+    lazily on first use) — everything else round-trips bitwise.
+    """
+    arrays: Dict[str, np.ndarray] = {}
+    a = sess.matrix
+    arrays["mat.row"] = a.row
+    arrays["mat.col"] = a.col
+    arrays["mat.val"] = a.val
+
+    part = sess.partition
+    arrays["part.elem_unit"] = part.elem_unit
+    meta: dict = {
+        "version": FORMAT_VERSION,
+        "shape": list(a.shape),
+        "topology": {"nodes": sess.topology.nodes, "cores": sess.topology.cores},
+        "exchange": sess.exchange,
+        "executor": sess.executor,
+        "partition": {"name": part.name, "cut": part.cut},
+    }
+
+    plan = part.plan
+    meta["two_level"] = None
+    if plan is not None:
+        arrays["plan.elem_node"] = plan.elem_node
+        arrays["plan.elem_core"] = plan.elem_core
+        _comm_stats_arrays("plan.node_stats", plan.node_stats, arrays)
+        _comm_stats_arrays("plan.core_stats", plan.core_stats, arrays)
+        meta["two_level"] = {
+            "combo": plan.combo,
+            "inter": [plan.inter.method, plan.inter.dim],
+            "intra": [plan.intra.method, plan.intra.dim],
+            "f": plan.f,
+            "c": plan.c,
+            "nnz": plan.nnz,
+            "inter_fd": plan.inter_fd,
+            "hyper_cut": plan.hyper_cut,
+        }
+
+    dp = sess.device_plan
+    arrays["dp.tiles"] = dp.tiles
+    arrays["dp.tile_row"] = dp.tile_row
+    arrays["dp.tile_col"] = dp.tile_col
+    arrays["dp.real_tiles"] = dp.real_tiles
+    meta["device_plan"] = {
+        "bm": dp.bm,
+        "bn": dp.bn,
+        "num_units": dp.num_units,
+    }
+
+    sp = sess.selective
+    if sp is None:
+        meta["exchange_plan"] = None
+    elif isinstance(sp, OverlapPlan):
+        _selective_arrays("sp", sp.selective, arrays)
+        for field in (
+            "local_tiles", "local_row", "local_slot",
+            "halo_tiles", "halo_row", "halo_slot",
+            "local_counts", "halo_counts",
+        ):
+            arrays[f"op.{field}"] = getattr(sp, field)
+        meta["exchange_plan"] = {"kind": "overlap", "selective": _selective_meta(sp.selective)}
+    else:
+        _selective_arrays("sp", sp, arrays)
+        meta["exchange_plan"] = {"kind": "selective", "selective": _selective_meta(sp)}
+
+    # Write-then-rename so concurrent readers (sibling serving processes
+    # polling the cache_dir) never see a partially-written archive, and a
+    # crash mid-write leaves no corrupt file under the final name.
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = f"{final}.tmp-{os.getpid()}"
+    try:
+        np.savez(tmp, **arrays, **{"meta.json": np.array(json.dumps(meta))})
+        # np.savez appends .npz to the temp name too.
+        os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, final)
+    finally:
+        for leftover in (tmp, tmp + ".npz"):
+            if os.path.exists(leftover):
+                os.remove(leftover)
+    return final
+
+
+def load_session(path: str, *, executor: Optional[str] = None) -> "SparseSession":
+    """Rebuild a :class:`SparseSession` from :func:`save_session` output.
+
+    ``executor`` overrides the saved default executor (the plans are
+    executor-agnostic); compiled closures are rebuilt lazily.
+    """
+    from repro.api.partitioners import PartitionResult
+    from repro.api.session import SparseSession
+
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta.json"][()]))
+        if meta["version"] != FORMAT_VERSION:
+            raise ValueError(
+                f"plan cache {path!r} has format v{meta['version']}, "
+                f"this build reads v{FORMAT_VERSION}"
+            )
+        shape = tuple(meta["shape"])
+        a = COO(shape, z["mat.row"], z["mat.col"], z["mat.val"])
+        topology = Topology(**meta["topology"])
+
+        two_level = None
+        if meta["two_level"] is not None:
+            tl = meta["two_level"]
+            two_level = TwoLevelPlan(
+                combo=tl["combo"],
+                inter=LevelSpec(*tl["inter"]),
+                intra=LevelSpec(*tl["intra"]),
+                f=tl["f"],
+                c=tl["c"],
+                shape=shape,
+                nnz=tl["nnz"],
+                elem_node=z["plan.elem_node"],
+                elem_core=z["plan.elem_core"],
+                node_stats=_comm_stats_from("plan.node_stats", z),
+                core_stats=_comm_stats_from("plan.core_stats", z),
+                inter_fd=tl["inter_fd"],
+                hyper_cut=tl["hyper_cut"],
+            )
+        part = PartitionResult(
+            name=meta["partition"]["name"],
+            topology=topology,
+            elem_unit=z["part.elem_unit"],
+            plan=two_level,
+            cut=meta["partition"]["cut"],
+        )
+
+        dpm = meta["device_plan"]
+        dp = DevicePlan(
+            shape=shape,
+            bm=dpm["bm"],
+            bn=dpm["bn"],
+            num_units=dpm["num_units"],
+            tiles=z["dp.tiles"],
+            tile_row=z["dp.tile_row"],
+            tile_col=z["dp.tile_col"],
+            real_tiles=z["dp.real_tiles"],
+        )
+
+        epm = meta["exchange_plan"]
+        if epm is None:
+            sp = None
+        else:
+            sel = _selective_from("sp", epm["selective"], z)
+            if epm["kind"] == "overlap":
+                sp = OverlapPlan(
+                    selective=sel,
+                    local_tiles=z["op.local_tiles"],
+                    local_row=z["op.local_row"],
+                    local_slot=z["op.local_slot"],
+                    halo_tiles=z["op.halo_tiles"],
+                    halo_row=z["op.halo_row"],
+                    halo_slot=z["op.halo_slot"],
+                    local_counts=z["op.local_counts"],
+                    halo_counts=z["op.halo_counts"],
+                )
+            else:
+                sp = sel
+
+    return SparseSession(
+        a,
+        topology,
+        part,
+        dp,
+        exchange=meta["exchange"],
+        selective=sp,
+        executor=executor or meta["executor"],
+    )
+
+
+def cached_distribute(
+    a: COO,
+    *,
+    topology: Topology,
+    combo: str,
+    exchange: str,
+    executor: str,
+    block: Tuple[int, int],
+    seed: int,
+    cache_dir: str,
+    partitioner_kw: Optional[dict] = None,
+) -> "SparseSession":
+    """``distribute`` with the two cache layers in front of planning.
+
+    Lookup order: in-process memo (same key planned/loaded before in
+    this process), then ``<cache_dir>/plan-<key>.npz`` (cross-process
+    warm start), then a real planning run. The ``cache_dir`` file is
+    (re)written whenever it is missing — including on a memo hit whose
+    key was first planned against a *different* cache_dir, or after an
+    external eviction — so sibling processes pointed at this directory
+    always find the plan. An unreadable/corrupt cache file (e.g. a
+    torn write from a crashed process) is treated as a miss and
+    overwritten, not an error. Memo hits return a re-wrap via
+    :meth:`SparseSession.with_executor`, sharing plan objects and the
+    compiled-closure cache.
+    """
+    from repro.api.session import distribute
+
+    key = plan_key(a, topology, combo, block, exchange, seed, partitioner_kw)
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, f"plan-{key}.npz")
+    rewrite = not os.path.exists(path)
+    sess = _MEMO.get(key)
+    if sess is not None:
+        _MEMO.move_to_end(key)  # LRU touch
+    else:
+        if not rewrite:
+            try:
+                sess = load_session(path, executor=executor)
+            except Exception:
+                # Corrupt / stale-format file: re-plan below and replace
+                # it, so later processes don't re-pay this miss.
+                sess = None
+                rewrite = True
+        if sess is None:
+            sess = distribute(
+                a,
+                topology=topology,
+                combo=combo,
+                exchange=exchange,
+                executor=executor,
+                block=block,
+                seed=seed,
+                **(partitioner_kw or {}),
+            )
+        _MEMO[key] = sess
+        while len(_MEMO) > _MEMO_MAX:
+            _MEMO.popitem(last=False)  # evict least-recently used
+    if rewrite:
+        save_session(sess, path)
+    return sess if sess.executor == executor else sess.with_executor(executor)

@@ -65,8 +65,22 @@ class SparseSession:
         right-hand sides ``[B, N]`` (returns ``[B, N]``): the batch runs
         as one SpMM — a single exchange carries all B vectors, so the
         scatter/gather phases amortize over the batch.
+
+        The output dtype matches the input's: the contraction runs in
+        float32 on every executor, but a float16/float64 ``x`` is cast
+        back on the way out instead of silently downcasting the caller's
+        precision. Non-float inputs raise ``TypeError``.
         """
-        return self._executor_fn(executor or self.executor)(x)
+        xa = np.asarray(x)
+        if xa.dtype.kind != "f":
+            raise TypeError(
+                f"spmv needs a float vector, got dtype {xa.dtype} — cast "
+                "explicitly (the contraction itself runs in float32)"
+            )
+        y = self._executor_fn(executor or self.executor)(xa)
+        if xa.dtype != np.float32:
+            y = np.asarray(y, dtype=xa.dtype)
+        return y
 
     def device_spmm(self) -> "SpmvFn":
         """A pure-JAX ``x -> A @ x`` closure over device-resident plan
@@ -98,8 +112,31 @@ class SparseSession:
         return mv
 
     def solve(self, solver: str = "power_iteration", **kw) -> SolveResult:
-        """Run a registered iterative solver (``iters=``, ``tol=``, ...)."""
+        """Run a registered iterative solver (``iters=``, ``tol=``, ...).
+
+        Solver results expose the iteration count as
+        ``SolveResult.iters_run`` (``iters`` is the *budget* argument).
+        """
         return SOLVERS.get(solver)(self, **kw)
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Serialize every planning artifact to one ``.npz`` (plus a JSON
+        meta entry inside it) — see :mod:`repro.api.plancache`. A session
+        loaded back produces bitwise-identical ``spmv`` results on every
+        executor. Returns the path written."""
+        from repro.api.plancache import save_session
+
+        return save_session(self, path)
+
+    @classmethod
+    def load(cls, path: str, *, executor: Optional[str] = None) -> "SparseSession":
+        """Rebuild a session saved with :meth:`save`; ``executor``
+        overrides the saved default (plans are executor-agnostic)."""
+        from repro.api.plancache import load_session
+
+        return load_session(path, executor=executor)
 
     # -- introspection -----------------------------------------------------
 
@@ -155,6 +192,47 @@ class SparseSession:
         sess._spmv_cache = self._spmv_cache  # share compiled closures
         return sess
 
+    def with_value_map(self, fn) -> "SparseSession":
+        """Same *structure* — partition, tile layout, exchange schedule —
+        with every stored matrix value transformed elementwise by ``fn``.
+
+        The whole planning pipeline depends only on the sparsity
+        pattern, so a value-only transform never re-plans: the packed
+        tile payloads (and the overlap split's local/halo copies) are
+        remapped in place of a re-pack. ``fn`` must be elementwise with
+        ``fn(0) == 0`` (padding entries must stay inert) — e.g.
+        ``np.abs``, which :func:`repro.api.solvers.pagerank` uses to
+        build the non-negative link matrix for ``normalize="auto"``.
+        The derived session starts with a cold closure cache (executors
+        capture tile payloads).
+        """
+        import dataclasses
+
+        from repro.pmvc.plan_device import OverlapPlan
+
+        a = self.matrix
+        mat = COO(a.shape, a.row, a.col, np.asarray(fn(a.val), dtype=a.val.dtype))
+        dp = dataclasses.replace(
+            self.device_plan,
+            tiles=np.asarray(fn(self.device_plan.tiles), dtype=np.float32),
+        )
+        sp = self.selective
+        if isinstance(sp, OverlapPlan):
+            sp = dataclasses.replace(
+                sp,
+                local_tiles=np.asarray(fn(sp.local_tiles), dtype=np.float32),
+                halo_tiles=np.asarray(fn(sp.halo_tiles), dtype=np.float32),
+            )
+        return SparseSession(
+            mat,
+            self.topology,
+            self.partition,
+            dp,
+            exchange=self.exchange,
+            selective=sp,
+            executor=self.executor,
+        )
+
     def with_exchange(self, exchange: str) -> "SparseSession":
         """Same partition/packing, re-planned exchange schedule.
 
@@ -189,6 +267,7 @@ def distribute(
     executor: str = "simulate",
     block: Union[int, Tuple[int, int]] = 16,
     seed: int = 0,
+    cache_dir: Optional[str] = None,
     **partitioner_kw,
 ) -> SparseSession:
     """Plan the full paper pipeline for ``a`` and return a session.
@@ -203,8 +282,29 @@ def distribute(
     ``"overlap"`` (selective + pipelined local/halo contraction — the
     exchange hides behind the tiles whose x the unit already owns;
     DESIGN.md §9).
+
+    ``cache_dir`` enables the persistent plan cache (DESIGN.md §10):
+    plans are keyed on (matrix content hash, topology, combo, block,
+    exchange, seed, partitioner kwargs); a key seen before in this
+    process returns a re-wrapped session without re-planning, a key
+    found on disk loads ``plan-<key>.npz``, and a miss plans then
+    writes the file so sibling serving processes warm-start.
     """
     bm, bn = (block, block) if isinstance(block, int) else block
+    if cache_dir is not None:
+        from repro.api.plancache import cached_distribute
+
+        return cached_distribute(
+            a,
+            topology=topology,
+            combo=combo,
+            exchange=exchange,
+            executor=executor,
+            block=(bm, bn),
+            seed=seed,
+            cache_dir=cache_dir,
+            partitioner_kw=partitioner_kw or None,
+        )
     part = resolve_partitioner(combo)(a, topology, seed=seed, **partitioner_kw)
     dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
     sp = EXCHANGES.get(exchange)(dp)

@@ -50,9 +50,13 @@ class SolveResult:
     ``value`` is the solver's scalar headline (dominant eigenvalue for
     power iteration, final residual norm otherwise); ``residuals`` is
     one entry per iteration (solver-specific metric, documented on each
-    driver). Batched drivers return ``x`` with shape ``[B, N]`` and
-    reduce the per-iteration metric over the batch (max — the slowest
-    right-hand side governs convergence).
+    driver); ``iters_run`` is the number of iterations actually
+    executed — the ``iters`` *keyword* is only the budget, so
+    ``iters_run <= iters`` (strictly less on a ``tol`` early stop) and
+    ``converged`` records whether the stop was tol-triggered. Batched
+    drivers return ``x`` with shape ``[B, N]`` and reduce the
+    per-iteration metric over the batch (max — the slowest right-hand
+    side governs convergence).
     """
 
     solver: str
@@ -322,10 +326,26 @@ def pagerank(
     tol: float = 0.0,
     damping: float = 0.85,
     seeds: Optional[np.ndarray] = None,
+    normalize: str = "auto",
     device_loop: bool = False,
 ) -> SolveResult:
-    """r ← d·Ar + (1−d)·s on the session's link matrix (assumed
-    column-normalized, ch.1 §3.1); residual = ‖r_k − r_{k−1}‖₁.
+    """r ← d·Pr + (1−d)·s; residual = ‖r_k − r_{k−1}‖₁.
+
+    ``normalize="auto"`` (the default) builds the column-stochastic
+    link matrix P from the session's matrix — ``P = |A|·D⁻¹`` with
+    ``D = diag(Σᵢ |Aᵢⱼ|)``, and *dangling* columns (no non-zero)
+    restarting at the teleport distribution (``P̄ = P + s·dᵀ``, the
+    Google-matrix fix, ch.1 §3.1 — uniform ``s = 1/n`` for classic
+    PageRank, the per-user seed row for personalized PageRank, so
+    dangling mass never leaks onto states unreachable from the
+    seeds). Nothing re-plans: ``|A|`` shares the
+    plan's structure (:meth:`SparseSession.with_value_map`) and the
+    column scaling rides on the iterate (``|A|·D⁻¹·r = |A|·(D⁻¹r)``),
+    so the result is a true probability vector (``r ≥ 0``,
+    ``Σr = 1``) on *any* input matrix. ``normalize="none"`` opts into
+    the raw historical behavior — A applied as-is with only an L1
+    renormalization per step; on a non-stochastic matrix that fixed
+    point is **not** a probability vector.
 
     ``seeds=None`` is classic PageRank (uniform teleport s = 1/n).
     ``seeds=[B, N]`` is multi-source *personalized* PageRank — one
@@ -333,6 +353,8 @@ def pagerank(
     SpMM per iteration (the multi-user serving path); the residual is
     the max 1-norm change over the batch.
     """
+    if normalize not in ("auto", "none"):
+        raise ValueError(f"normalize must be 'auto' or 'none', got {normalize!r}")
     n = session.matrix.shape[1]
     if seeds is None:
         s = np.full(n, 1.0 / n, np.float32)
@@ -345,15 +367,49 @@ def pagerank(
     batched = s.ndim == 2
     r0 = s.copy()
 
+    if normalize == "auto":
+        a = session.matrix
+        if a.shape[0] != a.shape[1]:
+            raise ValueError(f"pagerank needs a square matrix, got {a.shape}")
+        # |A| shares the plan; cache it — together with the column
+        # normalization (O(nnz) to derive) — on the session, so repeated
+        # pagerank/PPR solves (the multi-user serving path) pay the tile
+        # remap, the column scan, and the executor jit once.
+        cached = getattr(session, "_abs_link", None)
+        if cached is None:
+            colsum = np.bincount(
+                a.col, weights=np.abs(a.val.astype(np.float64)), minlength=n
+            )
+            dangling = (colsum == 0.0).astype(np.float32)
+            inv_col = np.where(
+                colsum > 0.0, 1.0 / np.maximum(colsum, 1e-300), 0.0
+            ).astype(np.float32)
+            cached = (session.with_value_map(np.abs), dangling, inv_col)
+            session._abs_link = cached
+        link, dangling, inv_col = cached
+    else:
+        dangling = inv_col = None
+        link = session
+
     if device_loop:
         import jax.numpy as jnp
 
-        mv = session.device_spmm()
+        mv = link.device_spmm()
         sd = jnp.asarray(s)
+        if normalize == "auto":
+            inv_d = jnp.asarray(inv_col)
+            dang_d = jnp.asarray(dangling)
+
+            def pr_step(r):
+                dmass = jnp.sum(r * dang_d, axis=-1, keepdims=True)
+                return mv(r * inv_d) + dmass * sd
+
+        else:
+            pr_step = mv
 
         def iterate(carry):
             (r,) = carry
-            r_new = damping * mv(r) + (1.0 - damping) * sd
+            r_new = damping * pr_step(r) + (1.0 - damping) * sd
             norm = jnp.sum(jnp.abs(r_new), axis=-1, keepdims=True)
             r_new = r_new / jnp.maximum(norm, 1e-30)
             diff = jnp.sum(jnp.abs(r_new - r), axis=-1)
@@ -366,11 +422,20 @@ def pagerank(
             "pagerank", r, res[-1] if len(res) else 0.0, res, k, conv
         )
 
+    if normalize == "auto":
+
+        def pr_step(r):
+            dmass = (r * dangling).sum(axis=-1, keepdims=True)
+            return link.spmv(r * inv_col) + dmass * s
+
+    else:
+        pr_step = link.spmv
+
     r = r0
     residuals: List[float] = []
     k = 0
     for k in range(1, iters + 1):
-        r_new = damping * session.spmv(r) + (1.0 - damping) * s
+        r_new = damping * pr_step(r) + (1.0 - damping) * s
         norm = np.abs(r_new).sum(axis=-1, keepdims=True)
         r_new = (r_new / np.maximum(norm, 1e-30)).astype(np.float32)
         diff = np.abs(r_new - r).sum(axis=-1)

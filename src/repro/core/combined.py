@@ -17,7 +17,8 @@ volumes) derive from that element-level assignment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import time
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -176,8 +177,15 @@ def two_level_partition(
     combo: str = "NL-HL",
     *,
     seed: int = 0,
+    timings: Optional[Dict[str, float]] = None,
 ) -> TwoLevelPlan:
-    """Run the paper's combined method: inter-node then intra-node."""
+    """Run the paper's combined method: inter-node then intra-node.
+
+    When ``timings`` is a dict it receives the wall-clock seconds of the
+    three planning stages (``inter_s``, ``intra_s``, ``metrics_s``) —
+    the per-phase decomposition ``benchmarks/bench_partition.py`` writes
+    to ``BENCH_plan.json``.
+    """
     if combo in PAPER_COMBOS:
         (im, idim), (jm, jdim) = PAPER_COMBOS[combo]
         inter, intra = LevelSpec(im, idim), LevelSpec(jm, jdim)
@@ -188,12 +196,14 @@ def two_level_partition(
         inter, intra = LevelSpec(tok[p[0]], tok[p[1]]), LevelSpec(tok[q[0]], tok[q[1]])
 
     # --- Inter-node level ------------------------------------------------
+    t0 = time.perf_counter()
     node_of_line = partition_lines(a, f, inter, seed=seed)
     elem_line = a.row if inter.dim == "rows" else a.col
     elem_node = node_of_line[elem_line].astype(np.int32)
 
     inter_loads = np.bincount(elem_node, minlength=f).astype(np.int64)
     inter_fd = int(inter_loads.max() - inter_loads.min())
+    t1 = time.perf_counter()
 
     # --- Intra-node level -------------------------------------------------
     elem_core = np.zeros(a.nnz, dtype=np.int32)
@@ -223,9 +233,14 @@ def two_level_partition(
         elem_core[sel] = assignment[local]
 
     # --- Metrics ------------------------------------------------------------
+    t2 = time.perf_counter()
     unit = elem_node.astype(np.int64) * c + elem_core
     node_stats = _comm_stats(a, elem_node.astype(np.int64), f)
     core_stats = _comm_stats(a, unit, f * c)
+    if timings is not None:
+        timings["inter_s"] = t1 - t0
+        timings["intra_s"] = t2 - t1
+        timings["metrics_s"] = time.perf_counter() - t2
     return TwoLevelPlan(
         combo=combo,
         inter=inter,

@@ -23,7 +23,8 @@ expert loads (``repro.core.expert_placement``).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import heapq
+from typing import List
 
 import numpy as np
 
@@ -66,14 +67,18 @@ def _phase01(weights: np.ndarray, f: int, descending: bool) -> np.ndarray:
     if descending:
         order = order[::-1]
     assignment = np.empty(weights.shape[0], dtype=np.int32)
-    loads = np.zeros(f, dtype=np.int64)
     # Seed: line i -> fragment i for the first f lines, then least-loaded.
     # (Seeding and the generic rule coincide when loads start at zero and
     # ties break on the lowest fragment id, matching the paper's example.)
-    for line in order:
-        frag = int(np.argmin(loads))
+    # A (load, fragment) heap pops exactly argmin-with-lowest-id — the
+    # same fragment np.argmin would pick — in O(n log f) instead of the
+    # O(n·f) per-line argmin scan.
+    heap = [(0, frag) for frag in range(f)]
+    w = weights.tolist()
+    for line in order.tolist():
+        load, frag = heap[0]
         assignment[line] = frag
-        loads[frag] += weights[line]
+        heapq.heapreplace(heap, (load + w[line], frag))
     return assignment
 
 
@@ -83,9 +88,27 @@ def _phase2(
     f: int,
     max_iters: int,
 ) -> int:
-    """In-place FD refinement. Returns iteration count."""
+    """In-place FD refinement. Returns iteration count.
+
+    Each refinement step evaluates *every* candidate transfer and
+    exchange between ``fcmx`` and ``fcmn`` in one vectorized pass:
+
+    * transfer — ``|Diff/2 − nzx|`` over all lines of ``fcmx`` at once;
+    * exchange — the score ``|Diff/2 − (nzx − nzn)|`` equals
+      ``|nzn − (nzx − Diff/2)|`` and the validity window
+      ``0 < nzx − nzn < Diff`` is the interval ``(nzx − Diff, nzx)``
+      *centered on that same target*, so for each ``lx`` the best
+      partner is one of the two ``searchsorted`` neighbours of
+      ``nzx − Diff/2`` in the sorted ``fcmn`` weights — any farther
+      element is both farther from the target and no more likely to be
+      valid.
+
+    This replaces the per-line Python loops (O(|fcmx|·|fcmn|) with a
+    numpy call per line) by O((|fcmx| + |fcmn|) log |fcmn|) per step.
+    """
     loads = fragment_loads(weights, assignment, f)
-    # Fragment membership as python lists for cheap add/remove.
+    # Fragment membership as python lists; moves swap-pop by position
+    # (order within a fragment is irrelevant to the heuristic).
     members: List[List[int]] = [[] for _ in range(f)]
     for line, frag in enumerate(assignment):
         members[frag].append(line)
@@ -99,57 +122,63 @@ def _phase2(
             break
         half = diff / 2.0
 
-        # Candidate 1: transfer a line from fcmx with nzx < Diff,
+        mx = np.asarray(members[fcmx], dtype=np.int64)
+        wx = weights[mx]
+
+        # Candidate 1: transfer a line from fcmx with 0 < nzx < Diff,
         # minimizing |Diff/2 - nzx|.
-        best_transfer: Optional[int] = None
-        best_transfer_score = np.inf
-        for line in members[fcmx]:
-            nzx = int(weights[line])
-            if 0 < nzx < diff:
-                score = abs(half - nzx)
-                if score < best_transfer_score:
-                    best_transfer, best_transfer_score = line, score
+        t_scores = np.where((wx > 0) & (wx < diff), np.abs(half - wx), np.inf)
+        ti = int(np.argmin(t_scores))
+        best_transfer_pos = ti if np.isfinite(t_scores[ti]) else -1
+        best_transfer_score = float(t_scores[ti])
 
         # Candidate 2: exchange (lx in fcmx, ln in fcmn) with
         # 0 < nzx - nzn < Diff, minimizing |Diff/2 - (nzx - nzn)|.
-        best_exchange = None
+        best_exchange = None  # (position in fcmx, position in fcmn)
         best_exchange_score = np.inf
-        if members[fcmn]:
-            mn_weights = np.array([weights[l] for l in members[fcmn]])
-            for lx in members[fcmx]:
-                nzx = int(weights[lx])
-                deltas = nzx - mn_weights
-                valid = (deltas > 0) & (deltas < diff)
-                if not valid.any():
-                    continue
-                scores = np.abs(half - deltas)
-                scores[~valid] = np.inf
-                j = int(np.argmin(scores))
-                if scores[j] < best_exchange_score:
-                    best_exchange = (lx, members[fcmn][j])
-                    best_exchange_score = float(scores[j])
+        mn = members[fcmn]
+        if mn:
+            wn = weights[np.asarray(mn, dtype=np.int64)]
+            sort_n = np.argsort(wn, kind="stable")
+            sw = wn[sort_n]
+            target = wx - half
+            pos = np.searchsorted(sw, target)
+            cand = np.stack(
+                (np.clip(pos - 1, 0, sw.shape[0] - 1), np.clip(pos, 0, sw.shape[0] - 1)),
+                axis=1,
+            )  # [|fcmx|, 2] — the two neighbours of the target
+            delta = wx[:, None] - sw[cand]
+            e_scores = np.where(
+                (delta > 0) & (delta < diff), np.abs(half - delta), np.inf
+            )
+            flat = int(np.argmin(e_scores))
+            li, ci = divmod(flat, 2)
+            if np.isfinite(e_scores[li, ci]):
+                best_exchange = (li, int(sort_n[cand[li, ci]]))
+                best_exchange_score = float(e_scores[li, ci])
 
         # Pick whichever move reduces the gap more (smaller score).
-        if best_transfer is None and best_exchange is None:
+        if best_transfer_pos < 0 and best_exchange is None:
             break
         if best_exchange is None or (
-            best_transfer is not None and best_transfer_score <= best_exchange_score
+            best_transfer_pos >= 0 and best_transfer_score <= best_exchange_score
         ):
-            line = best_transfer
+            pos_x = best_transfer_pos
+            line = members[fcmx][pos_x]
             gain = int(weights[line])
-            new_fd_numer = max(loads[fcmx] - gain, loads[fcmn] + gain)
-            members[fcmx].remove(line)
+            members[fcmx][pos_x] = members[fcmx][-1]
+            members[fcmx].pop()
             members[fcmn].append(line)
             assignment[line] = fcmn
             loads[fcmx] -= gain
             loads[fcmn] += gain
         else:
-            lx, ln = best_exchange
+            pos_x, pos_n = best_exchange
+            lx = members[fcmx][pos_x]
+            ln = members[fcmn][pos_n]
             delta = int(weights[lx] - weights[ln])
-            members[fcmx].remove(lx)
-            members[fcmn].remove(ln)
-            members[fcmx].append(ln)
-            members[fcmn].append(lx)
+            members[fcmx][pos_x] = ln
+            members[fcmn][pos_n] = lx
             assignment[lx] = fcmn
             assignment[ln] = fcmx
             loads[fcmx] -= delta

@@ -21,7 +21,7 @@ from repro.api import (
 )
 from repro.sparse import csr_from_coo
 from repro.sparse.formats import coo_from_dense
-from repro.sparse.generate import random_coo
+from repro.sparse.generate import PAPER_SUITE, generate, powerlaw_coo, random_coo
 
 COMBOS = ("NL-HL", "NL-HC", "NC-HL", "NC-HC")
 TOPO = Topology(4, 2)
@@ -220,6 +220,55 @@ def test_solver_pagerank_contracts(problem):
     res = sess.solve("pagerank", iters=10)
     assert res.x.shape == (a.shape[1],)
     assert np.isclose(np.abs(res.x).sum(), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", list(PAPER_SUITE))
+def test_pagerank_auto_probability_vector_on_paper_suite(name):
+    """Regression: on raw (non-stochastic, signed) suite matrices the old
+    pagerank returned garbage (negative entries, sum ≈ −0.004).
+    ``normalize="auto"`` must yield a converging probability vector on
+    every PAPER_SUITE generator."""
+    a = generate(PAPER_SUITE[name])
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HL")
+    res = sess.solve("pagerank", iters=80, tol=1e-5)
+    assert res.x.min() >= 0.0, name
+    assert np.isclose(res.x.sum(), 1.0, atol=1e-4), (name, float(res.x.sum()))
+    assert res.converged, (name, res.residuals[-3:])
+    # residuals of the damped iteration must contract (equality when the
+    # walk fixes after one step, e.g. the diagonal matrix where P = I)
+    assert res.residuals[-1] <= res.residuals[0]
+
+
+def test_pagerank_normalize_none_keeps_raw_behavior(problem):
+    """`normalize="none"` opts into the historical raw iteration — on a
+    non-stochastic matrix the fixed point is NOT a probability vector."""
+    a = powerlaw_coo(300, 2500, seed=2)
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HL")
+    raw = sess.solve("pagerank", iters=15, normalize="none")
+    assert not np.isclose(raw.x.sum(), 1.0, atol=1e-2)  # the old garbage
+    with pytest.raises(ValueError, match="normalize"):
+        sess.solve("pagerank", normalize="bogus")
+
+
+@pytest.mark.parametrize("executor", ["simulate", "reference"])
+def test_spmv_preserves_input_dtype(problem, executor):
+    """Regression: float64 in must come back float64 (compute may stay
+    f32), both [N] and [B, N]; non-float dtypes raise."""
+    a, x, _ = problem
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HC")
+    x64 = np.asarray(x, np.float64)
+    xs64 = np.stack([x64, 2 * x64])
+    for xin, shape in ((x64, (a.shape[0],)), (xs64, (2, a.shape[0]))):
+        y = sess.spmv(xin, executor=executor)
+        assert y.dtype == np.float64, executor
+        assert y.shape == shape
+    y32 = sess.spmv(x.astype(np.float32), executor=executor)
+    assert np.asarray(y32).dtype == np.float32
+    np.testing.assert_allclose(
+        sess.spmv(x64, executor=executor), y32, rtol=1e-5, atol=1e-4
+    )
+    with pytest.raises(TypeError, match="float"):
+        sess.spmv(np.arange(a.shape[1]), executor=executor)
 
 
 def test_user_registration_round_trip(problem):
