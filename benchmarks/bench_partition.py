@@ -150,6 +150,8 @@ def _time_planning(cfg: Dict) -> Dict:
     }
 
     # Cold distribute + the two cache layers (fresh key space per run).
+    from repro.api import SparseSession
+
     with tempfile.TemporaryDirectory() as cache:
         t0 = time.perf_counter()
         distribute(a, topology=topo, combo=cfg["combo"], exchange=cfg["exchange"],
@@ -164,13 +166,27 @@ def _time_planning(cfg: Dict) -> Dict:
         distribute(a, topology=topo, combo=cfg["combo"], exchange=cfg["exchange"],
                    block=cfg["block"], seed=cfg["seed"], cache_dir=cache)
         load = time.perf_counter() - t0
+        # The same warm start with every payload forced from the archive
+        # (what the v2 sparse format buys even without lazy loading).
+        plan_file = next(
+            os.path.join(cache, n) for n in os.listdir(cache)
+            if n.startswith("plan-") and n.endswith(".npz")
+        )
+        npz_bytes = os.path.getsize(plan_file)
+        plancache.clear_memo()
+        t0 = time.perf_counter()
+        SparseSession.load(plan_file, lazy=False)
+        load_mat = time.perf_counter() - t0
         plancache.clear_memo()
     out["distribute_cold_s"] = cold
     out["cache"] = {
         "memo_s": memo,
         "npz_load_s": load,
+        "npz_load_materialized_s": load_mat,
+        "npz_bytes": npz_bytes,
         "cold_vs_memo": round(cold / max(memo, 1e-9), 1),
         "cold_vs_npz_load": round(cold / max(load, 1e-9), 1),
+        "cold_vs_npz_load_materialized": round(cold / max(load_mat, 1e-9), 1),
     }
     return out
 
@@ -255,12 +271,23 @@ def record_baseline() -> int:
     return 0
 
 
+# Cross-process reload gate for the CI smoke: a (lazy) plan reload must
+# beat replanning by at least this factor on the quick config — the
+# whole point of the plan store. Ratio-of-ratios, so runner speed
+# cancels; kept conservative (the measured quick ratio is >>10×)
+# because the lazy load is a few ms and absolute timings that small
+# flake on shared runners.
+RELOAD_MIN_RATIO = 5.0
+
+
 def quick_smoke(check: bool) -> int:
     """CI smoke: quick-config planning time, optionally compared against
-    the committed ``quick_baseline`` (fail on >3× regression). Timing is
-    best-of-2, and the 3× limit is scaled by the runner-speed probe
-    (never *below* 3× — a fast runner must not tighten the gate), so a
-    slow shared CI host doesn't flake the gate."""
+    the committed ``quick_baseline`` (fail on >3× regression), plus the
+    cross-process reload-vs-replan ratio (fail under
+    ``RELOAD_MIN_RATIO``). Timing is best-of-2, and the 3× limit is
+    scaled by the runner-speed probe (never *below* 3× — a fast runner
+    must not tighten the gate), so a slow shared CI host doesn't flake
+    the gate."""
     runs = [_time_planning(QUICK_CONFIG) for _ in range(2)]
     quick = min(runs, key=lambda r: r["distribute_cold_s"])
     now = quick["distribute_cold_s"]
@@ -281,7 +308,15 @@ def quick_smoke(check: bool) -> int:
         print(f"FAIL: quick planning regressed {now / (baseline * speed):.1f}x "
               "over the speed-adjusted baseline")
         return 1
-    print("OK: within 3x of recorded baseline")
+    reload_ratio = max(r["cache"]["cold_vs_npz_load"] for r in runs)
+    print(f"reload smoke: cold_vs_npz_load={reload_ratio:.1f}x "
+          f"(gate {RELOAD_MIN_RATIO:.0f}x), materialized="
+          f"{quick['cache']['cold_vs_npz_load_materialized']:.1f}x")
+    if reload_ratio < RELOAD_MIN_RATIO:
+        print(f"FAIL: plan reload only {reload_ratio:.1f}x faster than "
+              f"replanning (needs >= {RELOAD_MIN_RATIO:.0f}x)")
+        return 1
+    print("OK: within 3x of recorded baseline, reload ratio healthy")
     return 0
 
 

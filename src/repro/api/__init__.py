@@ -60,7 +60,13 @@ from repro.api.partitioners import (
     register_partitioner,
     resolve_partitioner,
 )
-from repro.api.plancache import load_session, plan_key, save_session
+from repro.api import plancache
+from repro.api.plancache import (
+    load_session,
+    plan_key,
+    save_session,
+    set_memo_limit,
+)
 from repro.api.registry import Registry
 from repro.api.session import SparseSession, distribute
 from repro.api.solvers import SOLVERS, SolveResult, register_solver
@@ -85,4 +91,6 @@ __all__ = [
     "plan_key",
     "save_session",
     "load_session",
+    "set_memo_limit",
+    "plancache",
 ]

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.api.registry import Registry
 from repro.pmvc.dist import (
+    hoist_tiles,
     make_pmvc_step,
     make_simulate_fn,
     make_unit_mesh,
@@ -86,7 +87,9 @@ def simulate_executor(session: "SparseSession") -> SpmvFn:
     import jax.numpy as jnp
 
     dp = session.device_plan
-    run = make_simulate_fn(dp, session.selective, jit=True)
+    run = make_simulate_fn(
+        dp, session.selective, jit=True, transform=session.tile_transform
+    )
     n = dp.shape[0]
 
     def spmv(x: np.ndarray) -> np.ndarray:
@@ -106,13 +109,14 @@ def shard_map_executor(session: "SparseSession") -> SpmvFn:
     mesh = make_unit_mesh(dp.num_units)
     step = make_pmvc_step(dp, mesh, selective=sp)
     n = dp.shape[0]
+    tt = session.tile_transform
 
     if isinstance(sp, OverlapPlan):
         op = sp
-        local_tiles = jnp.asarray(op.local_tiles)
+        local_tiles = hoist_tiles(op.local_tiles, tt)
         local_row = jnp.asarray(op.local_row)
         local_slot = jnp.asarray(op.local_slot)
-        halo_tiles = jnp.asarray(op.halo_tiles)
+        halo_tiles = hoist_tiles(op.halo_tiles, tt)
         halo_row = jnp.asarray(op.halo_row)
         halo_slot = jnp.asarray(op.halo_slot)
         send_idx = jnp.asarray(op.selective.send_idx)
@@ -138,7 +142,7 @@ def shard_map_executor(session: "SparseSession") -> SpmvFn:
 
         return spmv_overlap
 
-    tiles = jnp.asarray(dp.tiles)
+    tiles = hoist_tiles(dp.tiles, tt)
     tile_row = jnp.asarray(dp.tile_row)
 
     if sp is None:

@@ -1,4 +1,4 @@
-"""Plan persistence: save / load / memoize planned sessions.
+"""Serving-grade plan store: save / load / memoize / GC planned sessions.
 
 The thesis' pipeline is *partition once, iterate many* — yet before this
 module every process re-ran the whole planning pipeline (partition,
@@ -18,30 +18,61 @@ partitioner kwargs, format version):
   ``spmv`` is bit-identical to the saved one's on every executor.
 * ``distribute(..., cache_dir=...)`` — looks up ``<cache_dir>/
   plan-<key>.npz``; on miss it plans and writes the file. A fresh
-  process pays one file read (~10–100 ms) instead of the full planning
-  pipeline.
+  process pays one (lazy) file read instead of the full planning
+  pipeline. ``cache_budget_bytes`` adds LRU pruning (:func:`gc`) so the
+  directory cannot grow without bound.
 * an in-process memo on the same key — a *second* ``distribute(...,
   cache_dir=...)`` call in the same process returns a re-wrapped
   session (plans and the compiled-closure cache shared, exactly
   :meth:`SparseSession.with_executor` semantics) without touching disk.
+  The memo bound is configurable, by session count and/or bytes
+  (:func:`set_memo_limit`).
 
-The ``.npz`` stores arrays uncompressed: plans are mostly dense f32
-tile payloads where zlib costs seconds and saves little; load time is
-what the serving fleet pays.
+**Sparse v2 format** (DESIGN.md §11). Padding the stacked per-unit tile
+arrays to the global max realizes load imbalance as wasted FLOPs at
+runtime — but on disk it is pure bloat, and it dominated the v1 payload.
+v2 persists only the *real* tiles (unit-major ragged concatenation +
+the per-unit counts already in ``real_tiles``) and rebuilds the padded
+form on load (:func:`repro.sparse.bell.stack_ragged`); the derived
+``tile_col_local`` workspace index is likewise dropped and rebuilt
+(:func:`repro.pmvc.plan_device.tile_col_local_from`). v1 archives load
+transparently; :func:`save_session` can still emit v1 for fleets
+mid-migration.
+
+**Lazy, mmap-friendly loading.** ``load_session`` reads and validates
+only the meta entry up front; the matrix, partition, and tile payloads
+are deferred behind memoized thunks that materialize on first touch —
+for a serving process, at its first ``spmv``. ``np.savez`` stores
+members uncompressed (plans are mostly f32 payloads where zlib costs
+seconds and saves little), so members are ``np.memmap``-ed straight out
+of the archive where possible instead of buffered through the zip
+reader. Note the OS may reclaim a deleted archive only after mapped
+views drop: avoid :func:`gc`-pruning a directory while sessions loaded
+from it are still unmaterialized.
 """
 from __future__ import annotations
 
 import collections
 import hashlib
+import itertools
 import json
 import os
-from typing import Dict, Optional, Tuple, TYPE_CHECKING, Union
+import time
+import zipfile
+import zlib
+from typing import Callable, Dict, Optional, Set, Tuple, TYPE_CHECKING, Union
 
 import numpy as np
 
 from repro.api.topology import Topology
 from repro.core.combined import CommStats, LevelSpec, TwoLevelPlan
-from repro.pmvc.plan_device import DevicePlan, OverlapPlan, SelectivePlan
+from repro.pmvc.plan_device import (
+    DevicePlan,
+    OverlapPlan,
+    SelectivePlan,
+    tile_col_local_from,
+)
+from repro.sparse.bell import ragged_from_stacked, stack_ragged
 from repro.sparse.formats import COO
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -49,29 +80,125 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard
 
 __all__ = [
     "FORMAT_VERSION",
+    "READABLE_VERSIONS",
     "plan_key",
     "save_session",
     "load_session",
     "cached_distribute",
     "clear_memo",
+    "set_memo_limit",
+    "gc",
 ]
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+# Formats this build reads: v1 (padded tile payloads, PR 4) loads
+# transparently; writes default to FORMAT_VERSION.
+READABLE_VERSIONS = (1, 2)
+
+# CRC-verify members served via the mmap fast path (the buffered
+# fallback is always checked by zipfile). Default on: in-place bit rot
+# must fail loudly, never compute garbage. A fleet on storage with its
+# own end-to-end integrity (checksumming FS, verified object store) can
+# flip this off to shave the ~GB/s streaming pass off materialization.
+MMAP_CRC_CHECK = True
+
+# Orphaned temp files (a writer killed mid-``np.savez``) older than this
+# are swept by :func:`gc`; young ones may still be in-flight writes.
+_TMP_MAX_AGE_S = 600.0
+_TMP_COUNTER = itertools.count()
 
 # In-process memo: key -> canonical loaded/planned session, LRU-bounded
 # (a session pins the matrix plus dense f32 tile payloads — tens of MB
 # at serving scale — so a long-lived process planning many distinct
 # matrices must not accumulate them forever). Sessions handed out are
 # re-wraps sharing plans + compiled closures (the with_executor
-# contract), so the memo never aliases mutable per-call state.
-_MEMO_MAX = 8
+# contract), so the memo never aliases mutable per-call state. Bounds
+# are configurable via :func:`set_memo_limit`: ``_MEMO_MAX`` caps the
+# session count (None = unbounded), ``_MEMO_MAX_BYTES`` the summed
+# payload estimate (None = unbounded; the newest entry always stays).
+_MEMO_MAX: Optional[int] = 8
+_MEMO_MAX_BYTES: Optional[int] = None
 _MEMO: "collections.OrderedDict[str, SparseSession]" = collections.OrderedDict()
+_MEMO_NBYTES: Dict[str, int] = {}
+
+_UNSET = object()
+
+
+def set_memo_limit(*, max_sessions=_UNSET, max_bytes=_UNSET) -> Dict[str, Optional[int]]:
+    """Configure the in-process memo bound; evicts immediately if the new
+    bound is exceeded. ``max_sessions`` caps the entry count (default 8,
+    ``None`` = unbounded); ``max_bytes`` caps the summed per-session
+    payload estimate (``None`` = unbounded — when set, the most recent
+    entry is always kept even if it alone exceeds the budget). Returns
+    the active limits."""
+    global _MEMO_MAX, _MEMO_MAX_BYTES
+    if max_sessions is not _UNSET:
+        _MEMO_MAX = max_sessions
+    if max_bytes is not _UNSET:
+        _MEMO_MAX_BYTES = max_bytes
+    _evict_memo()
+    return {"max_sessions": _MEMO_MAX, "max_bytes": _MEMO_MAX_BYTES}
 
 
 def clear_memo() -> None:
     """Drop every in-process memoized session (the ``.npz`` files stay).
     Useful in tests and to release plan memory in long-lived processes."""
     _MEMO.clear()
+    _MEMO_NBYTES.clear()
+
+
+def _session_nbytes(sess: "SparseSession") -> int:
+    """Approximate bytes a memoized session pins: the summed planning
+    arrays for a materialized session, or the archive's recorded payload
+    size for a lazily loaded one (materialization may add the re-padded
+    difference on top — close enough for an eviction budget)."""
+    hint = getattr(sess, "_payload_nbytes", None)
+    if hint is not None and not sess.is_materialized:
+        return int(hint)
+    total = 0
+    a = sess.matrix
+    for arr in (a.row, a.col, a.val):
+        total += arr.nbytes
+    part = sess.partition
+    total += part.elem_unit.nbytes
+    plan = part.plan
+    if plan is not None:
+        total += plan.elem_node.nbytes + plan.elem_core.nbytes
+        for st in (plan.node_stats, plan.core_stats):
+            total += st.nnz.nbytes + st.c_x.nbytes + st.c_y.nbytes + st.fr_x.nbytes
+    dp = sess.device_plan
+    total += dp.tiles.nbytes + dp.tile_row.nbytes + dp.tile_col.nbytes
+    sp = sess.selective
+    op = sp if isinstance(sp, OverlapPlan) else None
+    if op is not None:
+        for f in ("local_tiles", "local_row", "local_slot",
+                  "halo_tiles", "halo_row", "halo_slot"):
+            total += getattr(op, f).nbytes
+        sp = op.selective
+    if sp is not None:
+        for f in ("owned", "send_idx", "recv_src", "recv_lane", "needed",
+                  "tile_col_local"):
+            total += getattr(sp, f).nbytes
+    return total
+
+
+def _memo_put(key: str, sess: "SparseSession") -> None:
+    _MEMO[key] = sess
+    _MEMO_NBYTES[key] = _session_nbytes(sess)
+    _evict_memo()
+
+
+def _evict_memo() -> None:
+    def pop_oldest():
+        k, _ = _MEMO.popitem(last=False)
+        _MEMO_NBYTES.pop(k, None)
+
+    if _MEMO_MAX is not None:
+        while len(_MEMO) > max(int(_MEMO_MAX), 0):
+            pop_oldest()
+    if _MEMO_MAX_BYTES is not None:
+        while len(_MEMO) > 1 and sum(_MEMO_NBYTES.values()) > _MEMO_MAX_BYTES:
+            pop_oldest()
 
 
 def _matrix_digest(a: COO) -> bytes:
@@ -108,8 +235,10 @@ def plan_key(
     normalized to (b, b) exactly as :func:`repro.api.distribute` does,
     so ``plan_key(..., 16, ...)`` names the same file as
     ``distribute(..., block=16, cache_dir=...)`` wrote), the exchange
-    strategy, the seed, and the serialization format version. The
-    executor is deliberately excluded — it is runtime state, not plan.
+    strategy, the seed, and the serialization format version (so a
+    format bump orphans old files explicitly instead of mis-reading
+    them; orphans age out under a GC budget). The executor is
+    deliberately excluded — it is runtime state, not plan.
     """
     bm, bn = (block, block) if isinstance(block, int) else block
     h = hashlib.blake2b(digest_size=16)
@@ -122,6 +251,10 @@ def plan_key(
     return h.hexdigest()
 
 
+# ---------------------------------------------------------------------------
+# Serialization: shared pieces
+
+
 def _comm_stats_arrays(prefix: str, st: CommStats, out: Dict[str, np.ndarray]) -> None:
     out[f"{prefix}.nnz"] = st.nnz
     out[f"{prefix}.c_x"] = st.c_x
@@ -129,34 +262,24 @@ def _comm_stats_arrays(prefix: str, st: CommStats, out: Dict[str, np.ndarray]) -
     out[f"{prefix}.fr_x"] = st.fr_x
 
 
-def _comm_stats_from(prefix: str, z) -> CommStats:
+def _comm_stats_from(prefix: str, get) -> CommStats:
     return CommStats(
-        nnz=z[f"{prefix}.nnz"],
-        c_x=z[f"{prefix}.c_x"],
-        c_y=z[f"{prefix}.c_y"],
-        fr_x=z[f"{prefix}.fr_x"],
+        nnz=get(f"{prefix}.nnz"),
+        c_x=get(f"{prefix}.c_x"),
+        c_y=get(f"{prefix}.c_y"),
+        fr_x=get(f"{prefix}.fr_x"),
     )
 
 
-def _selective_arrays(prefix: str, sp: SelectivePlan, out: Dict[str, np.ndarray]) -> None:
-    for field in ("owned", "send_idx", "recv_src", "recv_lane", "needed", "tile_col_local"):
-        out[f"{prefix}.{field}"] = getattr(sp, field)
-
-
-def _selective_from(prefix: str, meta: dict, z) -> SelectivePlan:
-    return SelectivePlan(
-        num_units=meta["num_units"],
-        blocks_per_unit=meta["blocks_per_unit"],
-        lanes=meta["lanes"],
-        owned=z[f"{prefix}.owned"],
-        send_idx=z[f"{prefix}.send_idx"],
-        recv_src=z[f"{prefix}.recv_src"],
-        recv_lane=z[f"{prefix}.recv_lane"],
-        needed=z[f"{prefix}.needed"],
-        tile_col_local=z[f"{prefix}.tile_col_local"],
-        wire_blocks=meta["wire_blocks"],
-        naive_blocks=meta["naive_blocks"],
-    )
+_SELECTIVE_FIELDS = ("owned", "send_idx", "recv_src", "recv_lane", "needed")
+_OVERLAP_RAGGED = (
+    ("local_tiles", "local_counts"),
+    ("local_row", "local_counts"),
+    ("local_slot", "local_counts"),
+    ("halo_tiles", "halo_counts"),
+    ("halo_row", "halo_counts"),
+    ("halo_slot", "halo_counts"),
+)
 
 
 def _selective_meta(sp: SelectivePlan) -> dict:
@@ -169,13 +292,8 @@ def _selective_meta(sp: SelectivePlan) -> dict:
     }
 
 
-def save_session(sess: "SparseSession", path: str) -> str:
-    """Serialize every planning artifact of ``sess`` into one ``.npz``.
-
-    Returns the path written (``path``, with ``.npz`` appended by numpy
-    when missing). Not stored: the executor's compiled closures (rebuilt
-    lazily on first use) — everything else round-trips bitwise.
-    """
+def _base_meta_and_arrays(sess: "SparseSession", version: int):
+    """Matrix + partition + meta scaffolding common to both formats."""
     arrays: Dict[str, np.ndarray] = {}
     a = sess.matrix
     arrays["mat.row"] = a.row
@@ -185,7 +303,7 @@ def save_session(sess: "SparseSession", path: str) -> str:
     part = sess.partition
     arrays["part.elem_unit"] = part.elem_unit
     meta: dict = {
-        "version": FORMAT_VERSION,
+        "version": version,
         "shape": list(a.shape),
         "topology": {"nodes": sess.topology.nodes, "cores": sess.topology.cores},
         "exchange": sess.exchange,
@@ -210,70 +328,321 @@ def save_session(sess: "SparseSession", path: str) -> str:
             "inter_fd": plan.inter_fd,
             "hyper_cut": plan.hyper_cut,
         }
+    return arrays, meta
 
+
+def _apply_transform(sess: "SparseSession", arr: np.ndarray) -> np.ndarray:
+    """Bake a value view's transform into a tile payload at save time —
+    the archive always stores final values, never a transform recipe."""
+    tt = sess.tile_transform
+    if tt is None:
+        return arr
+    return np.asarray(tt(np.asarray(arr)), dtype=np.float32)
+
+
+def _pack_v1(sess: "SparseSession"):
+    """Legacy layout: padded stacked tile arrays + stored tile_col_local
+    (byte-compatible with the PR 4 writer, for fleets mid-migration)."""
+    arrays, meta = _base_meta_and_arrays(sess, 1)
     dp = sess.device_plan
-    arrays["dp.tiles"] = dp.tiles
+    arrays["dp.tiles"] = _apply_transform(sess, dp.tiles)
     arrays["dp.tile_row"] = dp.tile_row
     arrays["dp.tile_col"] = dp.tile_col
     arrays["dp.real_tiles"] = dp.real_tiles
-    meta["device_plan"] = {
-        "bm": dp.bm,
-        "bn": dp.bn,
-        "num_units": dp.num_units,
-    }
+    meta["device_plan"] = {"bm": dp.bm, "bn": dp.bn, "num_units": dp.num_units}
 
     sp = sess.selective
     if sp is None:
         meta["exchange_plan"] = None
     elif isinstance(sp, OverlapPlan):
-        _selective_arrays("sp", sp.selective, arrays)
-        for field in (
-            "local_tiles", "local_row", "local_slot",
-            "halo_tiles", "halo_row", "halo_slot",
-            "local_counts", "halo_counts",
-        ):
-            arrays[f"op.{field}"] = getattr(sp, field)
+        for field in _SELECTIVE_FIELDS + ("tile_col_local",):
+            arrays[f"sp.{field}"] = getattr(sp.selective, field)
+        for field, _ in _OVERLAP_RAGGED:
+            arrays[f"op.{field}"] = (
+                _apply_transform(sess, getattr(sp, field))
+                if field.endswith("tiles")
+                else getattr(sp, field)
+            )
+        arrays["op.local_counts"] = sp.local_counts
+        arrays["op.halo_counts"] = sp.halo_counts
         meta["exchange_plan"] = {"kind": "overlap", "selective": _selective_meta(sp.selective)}
     else:
-        _selective_arrays("sp", sp, arrays)
+        for field in _SELECTIVE_FIELDS + ("tile_col_local",):
+            arrays[f"sp.{field}"] = getattr(sp, field)
         meta["exchange_plan"] = {"kind": "selective", "selective": _selective_meta(sp)}
+    return arrays, meta
+
+
+def _pack_v2(sess: "SparseSession"):
+    """Sparse layout: real tiles only (unit-major ragged + counts);
+    padding and the derived tile_col_local are rebuilt on load."""
+    arrays, meta = _base_meta_and_arrays(sess, 2)
+    dp = sess.device_plan
+    counts = dp.real_tiles
+    arrays["dp.tiles"] = _apply_transform(sess, ragged_from_stacked(dp.tiles, counts))
+    arrays["dp.tile_row"] = ragged_from_stacked(dp.tile_row, counts)
+    arrays["dp.tile_col"] = ragged_from_stacked(dp.tile_col, counts)
+    arrays["dp.real_tiles"] = counts
+    meta["device_plan"] = {
+        "bm": dp.bm,
+        "bn": dp.bn,
+        "num_units": dp.num_units,
+        "t": dp.t,
+    }
+
+    sp = sess.selective
+    if sp is None:
+        meta["exchange_plan"] = None
+        return arrays, meta
+    op = sp if isinstance(sp, OverlapPlan) else None
+    sel = op.selective if op is not None else sp
+    for field in _SELECTIVE_FIELDS:
+        arrays[f"sp.{field}"] = getattr(sel, field)
+    if op is None:
+        meta["exchange_plan"] = {"kind": "selective", "selective": _selective_meta(sel)}
+        return arrays, meta
+    for field, counts_field in _OVERLAP_RAGGED:
+        ragged = ragged_from_stacked(getattr(op, field), getattr(op, counts_field))
+        if field.endswith("tiles"):
+            ragged = _apply_transform(sess, ragged)
+        arrays[f"op.{field}"] = ragged
+    arrays["op.local_counts"] = op.local_counts
+    arrays["op.halo_counts"] = op.halo_counts
+    meta["exchange_plan"] = {
+        "kind": "overlap",
+        "selective": _selective_meta(sel),
+        "t_local": op.t_local,
+        "t_halo": op.t_halo,
+    }
+    return arrays, meta
+
+
+def save_session(
+    sess: "SparseSession", path: str, *, format_version: Optional[int] = None
+) -> str:
+    """Serialize every planning artifact of ``sess`` into one ``.npz``.
+
+    Returns the path written (``path``, with ``.npz`` appended when
+    missing). Not stored: the executor's compiled closures (rebuilt
+    lazily on first use) — everything else round-trips bitwise. The
+    write is atomic (unique temp file + ``os.replace``), so concurrent
+    writers to one path and crash-mid-write both leave either the old
+    complete file or the new one under the final name, never a torn
+    archive. ``format_version=1`` emits the legacy padded layout.
+    """
+    version = FORMAT_VERSION if format_version is None else int(format_version)
+    if version not in READABLE_VERSIONS:
+        raise ValueError(f"unknown plan format v{version}, know {READABLE_VERSIONS}")
+    arrays, meta = (_pack_v1 if version == 1 else _pack_v2)(sess)
+    meta["version"] = version  # a bumped FORMAT_VERSION stamps through
+    meta["nbytes"] = int(sum(int(np.asarray(a).nbytes) for a in arrays.values()))
 
     # Write-then-rename so concurrent readers (sibling serving processes
-    # polling the cache_dir) never see a partially-written archive, and a
-    # crash mid-write leaves no corrupt file under the final name.
+    # polling the cache_dir) never see a partially-written archive. The
+    # temp name is unique per call (pid + counter): two threads saving
+    # the same key race harmlessly — last rename wins with a complete
+    # file either way.
     final = path if path.endswith(".npz") else path + ".npz"
-    tmp = f"{final}.tmp-{os.getpid()}"
+    tmp = f"{final}.tmp-{os.getpid()}-{next(_TMP_COUNTER)}"
     try:
-        np.savez(tmp, **arrays, **{"meta.json": np.array(json.dumps(meta))})
-        # np.savez appends .npz to the temp name too.
-        os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, final)
+        with open(tmp, "wb") as fh:
+            np.savez(fh, **arrays, **{"meta.json": np.array(json.dumps(meta))})
+        os.replace(tmp, final)
     finally:
-        for leftover in (tmp, tmp + ".npz"):
-            if os.path.exists(leftover):
-                os.remove(leftover)
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return final
 
 
-def load_session(path: str, *, executor: Optional[str] = None) -> "SparseSession":
-    """Rebuild a :class:`SparseSession` from :func:`save_session` output.
+# ---------------------------------------------------------------------------
+# Loading: meta validation up front, mmap-backed lazy payloads
 
-    ``executor`` overrides the saved default executor (the plans are
-    executor-agnostic); compiled closures are rebuilt lazily.
+
+def _read_meta_and_names(path: str):
+    """Parse the archive's central directory + meta entry — the cheap
+    integrity gate every load pays before any payload I/O. Raises
+    ``ValueError`` on anything unreadable (truncated zip, missing meta),
+    which :func:`cached_distribute` treats as a cache miss."""
+    try:
+        with zipfile.ZipFile(path) as zf:
+            names = {n[:-4] for n in zf.namelist() if n.endswith(".npy")}
+            if "meta.json" not in names:
+                raise ValueError(f"plan file {path!r} has no meta.json entry")
+            with zf.open("meta.json.npy") as fh:
+                arr = np.lib.format.read_array(fh, allow_pickle=False)
+        meta = json.loads(str(arr[()]))
+    except ValueError:
+        raise
+    except Exception as e:  # BadZipFile, OSError, JSONDecodeError, KeyError...
+        raise ValueError(f"unreadable plan file {path!r}: {e}") from e
+    return meta, names
+
+
+def _expected_members(meta: dict) -> Set[str]:
+    version = meta["version"]
+    members = {
+        "mat.row", "mat.col", "mat.val", "part.elem_unit",
+        "dp.tiles", "dp.tile_row", "dp.tile_col", "dp.real_tiles",
+    }
+    if meta["two_level"] is not None:
+        members |= {"plan.elem_node", "plan.elem_core"}
+        for prefix in ("plan.node_stats", "plan.core_stats"):
+            members |= {f"{prefix}.{f}" for f in ("nnz", "c_x", "c_y", "fr_x")}
+    ep = meta["exchange_plan"]
+    if ep is not None:
+        fields = _SELECTIVE_FIELDS + (("tile_col_local",) if version == 1 else ())
+        members |= {f"sp.{f}" for f in fields}
+        if ep["kind"] == "overlap":
+            members |= {f"op.{f}" for f, _ in _OVERLAP_RAGGED}
+            members |= {"op.local_counts", "op.halo_counts"}
+    return members
+
+
+def _verify_member_crc(path: str, info: "zipfile.ZipInfo") -> None:
+    """Stream the member's raw bytes through CRC-32 against the archive's
+    recorded checksum. The mmap fast path bypasses zipfile's read-time
+    CRC check, which is the *only* line of defense against in-place
+    payload corruption (bit rot, partial overwrite) in a structurally
+    valid archive — without this, a flipped byte in a tile member would
+    compute silently wrong results instead of failing loudly. One
+    sequential pass at materialization time (~GB/s, and it pre-warms the
+    page cache the memmap then serves from)."""
+    crc = 0
+    with open(path, "rb") as fh:
+        fh.seek(info.header_offset)
+        hdr = fh.read(30)
+        if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+            raise ValueError(f"plan file {path!r}: bad local header for {info.filename}")
+        nlen = int.from_bytes(hdr[26:28], "little")
+        elen = int.from_bytes(hdr[28:30], "little")
+        fh.seek(info.header_offset + 30 + nlen + elen)
+        left = info.file_size
+        while left:
+            chunk = fh.read(min(left, 1 << 22))
+            if not chunk:
+                raise ValueError(f"plan file {path!r}: truncated member {info.filename}")
+            crc = zlib.crc32(chunk, crc)
+            left -= len(chunk)
+    if crc != info.CRC:
+        raise ValueError(
+            f"plan file {path!r}: CRC mismatch in member {info.filename} "
+            "(in-place corruption) — evict the file and replan"
+        )
+
+
+def _mmap_member(path: str, name: str) -> Optional[np.ndarray]:
+    """Memory-map one uncompressed ``.npy`` member straight out of the
+    archive (np.savez = ZIP_STORED, so the raw array bytes sit
+    contiguously at a fixed offset), after a CRC-32 pass over its bytes.
+    Returns ``None`` when the member cannot be mapped — caller falls
+    back to a buffered read (which CRC-checks internally). Raises
+    ``ValueError`` on a checksum mismatch."""
+    try:
+        with zipfile.ZipFile(path) as zf:
+            info = zf.getinfo(name + ".npy")
+            if info.compress_type != zipfile.ZIP_STORED:
+                return None
+        with open(path, "rb") as fh:
+            fh.seek(info.header_offset)
+            hdr = fh.read(30)
+            if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+                return None
+            nlen = int.from_bytes(hdr[26:28], "little")
+            elen = int.from_bytes(hdr[28:30], "little")
+            fh.seek(info.header_offset + 30 + nlen + elen)
+            version = np.lib.format.read_magic(fh)
+            if version == (1, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_1_0(fh)
+            elif version == (2, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_2_0(fh)
+            else:
+                return None
+            if dtype.hasobject:
+                return None
+            if int(np.prod(shape)) == 0:
+                return np.zeros(shape, dtype=dtype)
+            offset = fh.tell()
+    except ValueError:
+        raise
+    except Exception:
+        return None
+    if MMAP_CRC_CHECK:
+        _verify_member_crc(path, info)
+    return np.memmap(
+        path, dtype=dtype, mode="r", shape=shape, offset=offset,
+        order="F" if fortran else "C",
+    )
+
+
+class _ArchiveReader:
+    """Per-member access into one saved plan, opened on demand so a lazy
+    session holds no file descriptor between load and materialization.
+    Every byte handed out is CRC-checked (by :func:`_verify_member_crc`
+    on the mmap path, by zipfile on the buffered fallback), so in-place
+    corruption surfaces as ``ValueError``/``BadZipFile`` at
+    materialization — never as silently wrong numerics."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def __call__(self, name: str) -> np.ndarray:
+        m = _mmap_member(self.path, name)
+        if m is not None:
+            return m
+        with np.load(self.path, allow_pickle=False) as z:
+            return z[name]
+
+
+def _memoized(fn: Callable):
+    """Wrap a loader so it runs once and every sharer sees one object —
+    the thunk contract :class:`SparseSession` lazy slots rely on."""
+    box: list = []
+
+    def thunk():
+        if not box:
+            box.append(fn())
+        return box[0]
+
+    return thunk
+
+
+def load_session(
+    path: str, *, executor: Optional[str] = None, lazy: bool = True
+) -> "SparseSession":
+    """Rebuild a :class:`SparseSession` from :func:`save_session` output
+    (v1 or v2 archives).
+
+    Validates the archive structure (readable zip, known format version,
+    every expected member present) and reads the meta entry eagerly;
+    matrix / partition / device plan / exchange plan materialize behind
+    memoized thunks on first touch, mmap-backed where possible
+    (``lazy=False`` forces them now). ``executor`` overrides the saved
+    default executor (the plans are executor-agnostic); compiled
+    closures are rebuilt lazily either way. Raises ``ValueError`` on a
+    corrupt or unknown-format archive.
     """
     from repro.api.partitioners import PartitionResult
     from repro.api.session import SparseSession
 
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["meta.json"][()]))
-        if meta["version"] != FORMAT_VERSION:
-            raise ValueError(
-                f"plan cache {path!r} has format v{meta['version']}, "
-                f"this build reads v{FORMAT_VERSION}"
-            )
-        shape = tuple(meta["shape"])
-        a = COO(shape, z["mat.row"], z["mat.col"], z["mat.val"])
-        topology = Topology(**meta["topology"])
+    meta, names = _read_meta_and_names(path)
+    version = meta.get("version")
+    if version not in READABLE_VERSIONS:
+        raise ValueError(
+            f"plan cache {path!r} has format v{version}, this build reads "
+            f"v{READABLE_VERSIONS[0]}..v{READABLE_VERSIONS[-1]}"
+        )
+    missing = _expected_members(meta) - names
+    if missing:
+        raise ValueError(f"plan file {path!r} is missing arrays {sorted(missing)}")
 
+    shape = tuple(meta["shape"])
+    topology = Topology(**meta["topology"])
+    read = _ArchiveReader(path)
+
+    def make_matrix() -> COO:
+        return COO(shape, read("mat.row"), read("mat.col"), read("mat.val"))
+
+    def make_partition() -> PartitionResult:
         two_level = None
         if meta["two_level"] is not None:
             tl = meta["two_level"]
@@ -285,62 +654,166 @@ def load_session(path: str, *, executor: Optional[str] = None) -> "SparseSession
                 c=tl["c"],
                 shape=shape,
                 nnz=tl["nnz"],
-                elem_node=z["plan.elem_node"],
-                elem_core=z["plan.elem_core"],
-                node_stats=_comm_stats_from("plan.node_stats", z),
-                core_stats=_comm_stats_from("plan.core_stats", z),
+                elem_node=read("plan.elem_node"),
+                elem_core=read("plan.elem_core"),
+                node_stats=_comm_stats_from("plan.node_stats", read),
+                core_stats=_comm_stats_from("plan.core_stats", read),
                 inter_fd=tl["inter_fd"],
                 hyper_cut=tl["hyper_cut"],
             )
-        part = PartitionResult(
+        return PartitionResult(
             name=meta["partition"]["name"],
             topology=topology,
-            elem_unit=z["part.elem_unit"],
+            elem_unit=read("part.elem_unit"),
             plan=two_level,
             cut=meta["partition"]["cut"],
         )
 
-        dpm = meta["device_plan"]
-        dp = DevicePlan(
+    dpm = meta["device_plan"]
+
+    def make_device_plan() -> DevicePlan:
+        if version == 1:
+            tiles = read("dp.tiles")
+            tile_row = read("dp.tile_row")
+            tile_col = read("dp.tile_col")
+            counts = read("dp.real_tiles")
+        else:
+            counts = np.asarray(read("dp.real_tiles"))
+            t = dpm["t"]
+            tiles = stack_ragged(np.asarray(read("dp.tiles")), counts, t)
+            tile_row = stack_ragged(np.asarray(read("dp.tile_row")), counts, t)
+            tile_col = stack_ragged(np.asarray(read("dp.tile_col")), counts, t)
+        return DevicePlan(
             shape=shape,
             bm=dpm["bm"],
             bn=dpm["bn"],
             num_units=dpm["num_units"],
-            tiles=z["dp.tiles"],
-            tile_row=z["dp.tile_row"],
-            tile_col=z["dp.tile_col"],
-            real_tiles=z["dp.real_tiles"],
+            tiles=tiles,
+            tile_row=tile_row,
+            tile_col=tile_col,
+            real_tiles=counts,
         )
 
-        epm = meta["exchange_plan"]
-        if epm is None:
-            sp = None
-        else:
-            sel = _selective_from("sp", epm["selective"], z)
-            if epm["kind"] == "overlap":
-                sp = OverlapPlan(
-                    selective=sel,
-                    local_tiles=z["op.local_tiles"],
-                    local_row=z["op.local_row"],
-                    local_slot=z["op.local_slot"],
-                    halo_tiles=z["op.halo_tiles"],
-                    halo_row=z["op.halo_row"],
-                    halo_slot=z["op.halo_slot"],
-                    local_counts=z["op.local_counts"],
-                    halo_counts=z["op.halo_counts"],
-                )
-            else:
-                sp = sel
+    dp_thunk = _memoized(make_device_plan)
+    epm = meta["exchange_plan"]
 
-    return SparseSession(
-        a,
+    def make_selective():
+        sel_meta = epm["selective"]
+        needed = read("sp.needed")
+        if version == 1:
+            tile_col_local = read("sp.tile_col_local")
+        else:
+            dp = dp_thunk()
+            tile_col_local = tile_col_local_from(
+                np.asarray(needed), dp.tile_col, dp.num_col_blocks
+            ).astype(dp.tile_col.dtype)
+        sel = SelectivePlan(
+            num_units=sel_meta["num_units"],
+            blocks_per_unit=sel_meta["blocks_per_unit"],
+            lanes=sel_meta["lanes"],
+            owned=read("sp.owned"),
+            send_idx=read("sp.send_idx"),
+            recv_src=read("sp.recv_src"),
+            recv_lane=read("sp.recv_lane"),
+            needed=needed,
+            tile_col_local=tile_col_local,
+            wire_blocks=sel_meta["wire_blocks"],
+            naive_blocks=sel_meta["naive_blocks"],
+        )
+        if epm["kind"] != "overlap":
+            return sel
+        local_counts = np.asarray(read("op.local_counts"))
+        halo_counts = np.asarray(read("op.halo_counts"))
+        fields = {"local_counts": local_counts, "halo_counts": halo_counts}
+        for field, counts_field in _OVERLAP_RAGGED:
+            raw = read(f"op.{field}")
+            if version == 1:
+                fields[field] = raw
+            else:
+                t = epm["t_local"] if counts_field == "local_counts" else epm["t_halo"]
+                fields[field] = stack_ragged(np.asarray(raw), fields[counts_field], t)
+        return OverlapPlan(selective=sel, **fields)
+
+    sess = SparseSession(
+        _memoized(make_matrix),
         topology,
-        part,
-        dp,
+        _memoized(make_partition),
+        dp_thunk,
         exchange=meta["exchange"],
-        selective=sp,
+        selective=None if epm is None else _memoized(make_selective),
         executor=executor or meta["executor"],
     )
+    sess._payload_nbytes = meta.get("nbytes")
+    if not lazy:
+        sess.materialize()
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# Disk-cache GC
+
+
+def _touch(path: str) -> None:
+    """Mark a plan file as recently used (explicit atime bump — relatime
+    and noatime mounts would otherwise starve the LRU order)."""
+    try:
+        st = os.stat(path)
+        os.utime(path, times=(time.time(), st.st_mtime))
+    except OSError:
+        pass
+
+
+def gc(cache_dir: str, budget_bytes: int, *, keep=()) -> Dict[str, int]:
+    """Prune ``plan-*.npz`` files least-recently-used-first (access time
+    order — cache hits :func:`_touch` their file, so LRU is explicit,
+    not mount-option-dependent) until the directory total is within
+    ``budget_bytes``. ``keep`` paths are never removed, whatever the
+    budget — :func:`cached_distribute` protects the plan it just wrote.
+    Orphaned ``.tmp-*`` files from crashed writers older than ~10 min
+    are swept as well. Returns ``{"files_removed", "bytes_freed",
+    "bytes_in_use", "tmp_removed"}``.
+    """
+    keep_paths = {os.path.abspath(p) for p in keep}
+    now = time.time()
+    entries = []
+    tmp_removed = 0
+    try:
+        listing = os.listdir(cache_dir)
+    except OSError:
+        return {"files_removed": 0, "bytes_freed": 0, "bytes_in_use": 0,
+                "tmp_removed": 0}
+    for name in listing:
+        p = os.path.join(cache_dir, name)
+        try:
+            st = os.stat(p)
+        except OSError:
+            continue  # raced with a concurrent gc/writer
+        if ".tmp-" in name:
+            if now - st.st_mtime > _TMP_MAX_AGE_S:
+                try:
+                    os.remove(p)
+                    tmp_removed += 1
+                except OSError:
+                    pass
+            continue
+        if name.startswith("plan-") and name.endswith(".npz"):
+            entries.append((st.st_atime, st.st_size, p))
+    total = sum(size for _, size, _ in entries)
+    removed = freed = 0
+    for _, size, p in sorted(entries):
+        if total <= budget_bytes:
+            break
+        if os.path.abspath(p) in keep_paths:
+            continue
+        try:
+            os.remove(p)
+        except OSError:
+            continue
+        total -= size
+        removed += 1
+        freed += size
+    return {"files_removed": removed, "bytes_freed": freed,
+            "bytes_in_use": total, "tmp_removed": tmp_removed}
 
 
 def cached_distribute(
@@ -353,21 +826,25 @@ def cached_distribute(
     block: Tuple[int, int],
     seed: int,
     cache_dir: str,
+    cache_budget_bytes: Optional[int] = None,
     partitioner_kw: Optional[dict] = None,
 ) -> "SparseSession":
     """``distribute`` with the two cache layers in front of planning.
 
     Lookup order: in-process memo (same key planned/loaded before in
     this process), then ``<cache_dir>/plan-<key>.npz`` (cross-process
-    warm start), then a real planning run. The ``cache_dir`` file is
-    (re)written whenever it is missing — including on a memo hit whose
-    key was first planned against a *different* cache_dir, or after an
-    external eviction — so sibling processes pointed at this directory
-    always find the plan. An unreadable/corrupt cache file (e.g. a
-    torn write from a crashed process) is treated as a miss and
-    overwritten, not an error. Memo hits return a re-wrap via
+    warm start, loaded lazily — tile payloads materialize at first use),
+    then a real planning run. The ``cache_dir`` file is (re)written
+    whenever it is missing — including on a memo hit whose key was first
+    planned against a *different* cache_dir, or after an external
+    eviction — so sibling processes pointed at this directory always
+    find the plan. An unreadable/corrupt cache file (e.g. a torn write
+    from a crashed process) is treated as a miss and overwritten, not an
+    error. Memo hits return a re-wrap via
     :meth:`SparseSession.with_executor`, sharing plan objects and the
-    compiled-closure cache.
+    compiled-closure cache. With ``cache_budget_bytes`` set, the
+    directory is LRU-pruned (:func:`gc`) after each write, the current
+    key's file always kept; hits never pay the directory scan.
     """
     from repro.api.session import distribute
 
@@ -378,10 +855,13 @@ def cached_distribute(
     sess = _MEMO.get(key)
     if sess is not None:
         _MEMO.move_to_end(key)  # LRU touch
+        if not rewrite:
+            _touch(path)  # keep the file's LRU recency in step with the memo's
     else:
         if not rewrite:
             try:
                 sess = load_session(path, executor=executor)
+                _touch(path)
             except Exception:
                 # Corrupt / stale-format file: re-plan below and replace
                 # it, so later processes don't re-pay this miss.
@@ -398,9 +878,11 @@ def cached_distribute(
                 seed=seed,
                 **(partitioner_kw or {}),
             )
-        _MEMO[key] = sess
-        while len(_MEMO) > _MEMO_MAX:
-            _MEMO.popitem(last=False)  # evict least-recently used
+        _memo_put(key, sess)
     if rewrite:
         save_session(sess, path)
+        # Prune only when we added bytes — memo/disk hits must stay a
+        # lookup, not a directory scan.
+        if cache_budget_bytes is not None:
+            gc(cache_dir, cache_budget_bytes, keep=(path,))
     return sess if sess.executor == executor else sess.with_executor(executor)

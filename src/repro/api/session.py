@@ -29,6 +29,19 @@ class SparseSession:
     Holds the immutable products of the planning pipeline (partition,
     packed device plan, exchange schedule) plus per-executor compiled
     state, built lazily and cached. Construct via :func:`distribute`.
+
+    Any of ``matrix`` / ``partition`` / ``device_plan`` / ``selective``
+    may be passed as a zero-argument callable (a *thunk*): the plan store
+    (DESIGN.md §11) loads sessions this way, deferring tile
+    materialization until an executor first needs it. Thunks must be
+    memoized (return the same object every call) — derived sessions
+    (:meth:`with_executor`) share them raw, so a loaded plan is
+    materialized at most once however many re-wraps exist.
+
+    ``tile_transform`` is an optional elementwise value map applied to
+    tile payloads at device-hoist time — the storage-sharing fast path
+    behind :meth:`with_value_map` (``fn(0) == 0`` required, padding must
+    stay inert).
     """
 
     def __init__(
@@ -41,15 +54,61 @@ class SparseSession:
         exchange: str,
         selective: ExchangePlan,
         executor: str,
+        tile_transform=None,
     ):
-        self.matrix = matrix
+        self._matrix = matrix
         self.topology = topology
-        self.partition = partition
-        self.device_plan = device_plan
+        self._partition = partition
+        self._device_plan = device_plan
         self.exchange = exchange
-        self.selective = selective
+        self._selective = selective
         self.executor = executor
+        self.tile_transform = tile_transform
         self._spmv_cache: Dict[str, SpmvFn] = {}
+
+    # -- lazy planning artifacts -------------------------------------------
+    # Each property materializes a thunk in place on first access; the
+    # raw slot keeps the thunk so derived sessions can share it unforced.
+
+    @property
+    def matrix(self) -> COO:
+        if callable(self._matrix):
+            self._matrix = self._matrix()
+        return self._matrix
+
+    @property
+    def partition(self) -> PartitionResult:
+        if callable(self._partition):
+            self._partition = self._partition()
+        return self._partition
+
+    @property
+    def device_plan(self) -> DevicePlan:
+        if callable(self._device_plan):
+            self._device_plan = self._device_plan()
+        return self._device_plan
+
+    @property
+    def selective(self) -> ExchangePlan:
+        if callable(self._selective):
+            self._selective = self._selective()
+        return self._selective
+
+    @property
+    def is_materialized(self) -> bool:
+        """False while any planning artifact is still a pending thunk."""
+        return not any(
+            callable(v)
+            for v in (self._matrix, self._partition, self._device_plan, self._selective)
+        )
+
+    def materialize(self) -> "SparseSession":
+        """Force every deferred planning artifact now (a lazily loaded
+        session otherwise pays materialization on first use); returns
+        ``self`` for chaining."""
+        for name in ("matrix", "partition", "device_plan", "selective"):
+            getattr(self, name)
+        return self
 
     # -- execution ---------------------------------------------------------
 
@@ -96,7 +155,7 @@ class SparseSession:
         from repro.pmvc.dist import make_simulate_fn
 
         dp = self.device_plan
-        run = make_simulate_fn(dp, self.selective)
+        run = make_simulate_fn(dp, self.selective, transform=self.tile_transform)
         n, m = dp.shape
         ncb, bn = dp.num_col_blocks, dp.bn
 
@@ -121,22 +180,34 @@ class SparseSession:
 
     # -- persistence -------------------------------------------------------
 
-    def save(self, path: str) -> str:
+    def save(self, path: str, *, format_version: Optional[int] = None) -> str:
         """Serialize every planning artifact to one ``.npz`` (plus a JSON
         meta entry inside it) — see :mod:`repro.api.plancache`. A session
         loaded back produces bitwise-identical ``spmv`` results on every
-        executor. Returns the path written."""
+        executor. The default (v2) format stores only real, non-padding
+        tiles; ``format_version=1`` writes the legacy padded layout for
+        fleets mid-migration. Returns the path written."""
         from repro.api.plancache import save_session
 
-        return save_session(self, path)
+        return save_session(self, path, format_version=format_version)
 
     @classmethod
-    def load(cls, path: str, *, executor: Optional[str] = None) -> "SparseSession":
+    def load(
+        cls, path: str, *, executor: Optional[str] = None, lazy: bool = True
+    ) -> "SparseSession":
         """Rebuild a session saved with :meth:`save`; ``executor``
-        overrides the saved default (plans are executor-agnostic)."""
+        overrides the saved default (plans are executor-agnostic).
+
+        The load is lazy by default: only the meta entry is read and
+        validated up front; matrix / partition / tile payloads
+        materialize from the archive (mmap-backed where possible) when
+        first touched — for the serving warm-start that means at the
+        first ``spmv``. ``lazy=False`` forces everything immediately
+        (:meth:`materialize`). Reads both the current sparse v2 format
+        and v1 archives transparently."""
         from repro.api.plancache import load_session
 
-        return load_session(path, executor=executor)
+        return load_session(path, executor=executor, lazy=lazy)
 
     # -- introspection -----------------------------------------------------
 
@@ -181,30 +252,46 @@ class SparseSession:
         """
         EXECUTORS.get(executor)  # fail fast on unknown names
         sess = SparseSession(
-            self.matrix,
+            self._matrix,  # raw slots: pending thunks stay shared + pending
             self.topology,
-            self.partition,
-            self.device_plan,
+            self._partition,
+            self._device_plan,
             exchange=self.exchange,
-            selective=self.selective,
+            selective=self._selective,
             executor=executor,
+            tile_transform=self.tile_transform,
         )
         sess._spmv_cache = self._spmv_cache  # share compiled closures
         return sess
 
-    def with_value_map(self, fn) -> "SparseSession":
+    def with_value_map(self, fn, *, materialize: bool = False) -> "SparseSession":
         """Same *structure* — partition, tile layout, exchange schedule —
         with every stored matrix value transformed elementwise by ``fn``.
 
         The whole planning pipeline depends only on the sparsity
-        pattern, so a value-only transform never re-plans: the packed
-        tile payloads (and the overlap split's local/halo copies) are
-        remapped in place of a re-pack. ``fn`` must be elementwise with
-        ``fn(0) == 0`` (padding entries must stay inert) — e.g.
-        ``np.abs``, which :func:`repro.api.solvers.pagerank` uses to
-        build the non-negative link matrix for ``normalize="auto"``.
-        The derived session starts with a cold closure cache (executors
-        capture tile payloads).
+        pattern, so a value-only transform never re-plans — and by
+        default it never copies the tile payloads either: the derived
+        session is a **value view** sharing this session's
+        ``device_plan`` (and overlap local/halo) tile storage, with
+        ``fn`` recorded as ``tile_transform`` and applied when an
+        executor hoists the tiles to device
+        (:func:`repro.pmvc.dist.hoist_tiles` — known ufuncs like
+        ``np.abs`` run as their device twin after the transfer, so even
+        the transient host copy disappears). Only the COO ``val`` array
+        (O(nnz), the reference executor's input) is remapped eagerly.
+        The sign information of the base payload is untouched — ``fn``
+        views it, nothing is overwritten — which is what lets
+        :func:`repro.api.solvers.pagerank` build its non-negative
+        ``|A|`` link matrix per session without duplicating tile arrays.
+
+        ``fn`` must be elementwise with ``fn(0) == 0`` (padding entries
+        must stay inert). ``materialize=True`` opts back into eagerly
+        rewritten tile copies — for ``fn`` that is not
+        numpy-broadcastable over the ``[U, T, bm, bn]`` payload, or when
+        the base session is about to be dropped and keeping it alive
+        through the view is undesirable. Either way the derived session
+        starts with a cold closure cache (executors capture tile
+        payloads).
         """
         import dataclasses
 
@@ -212,16 +299,29 @@ class SparseSession:
 
         a = self.matrix
         mat = COO(a.shape, a.row, a.col, np.asarray(fn(a.val), dtype=a.val.dtype))
+        base = self.tile_transform  # views compose: fn ∘ base over shared storage
+        transform = fn if base is None else (lambda t: fn(base(t)))
+        if not materialize:
+            return SparseSession(
+                mat,
+                self.topology,
+                self._partition,
+                self._device_plan,  # shared storage — the value view
+                exchange=self.exchange,
+                selective=self._selective,
+                executor=self.executor,
+                tile_transform=transform,
+            )
         dp = dataclasses.replace(
             self.device_plan,
-            tiles=np.asarray(fn(self.device_plan.tiles), dtype=np.float32),
+            tiles=np.asarray(transform(self.device_plan.tiles), dtype=np.float32),
         )
         sp = self.selective
         if isinstance(sp, OverlapPlan):
             sp = dataclasses.replace(
                 sp,
-                local_tiles=np.asarray(fn(sp.local_tiles), dtype=np.float32),
-                halo_tiles=np.asarray(fn(sp.halo_tiles), dtype=np.float32),
+                local_tiles=np.asarray(transform(sp.local_tiles), dtype=np.float32),
+                halo_tiles=np.asarray(transform(sp.halo_tiles), dtype=np.float32),
             )
         return SparseSession(
             mat,
@@ -243,17 +343,23 @@ class SparseSession:
         return SparseSession(
             self.matrix,
             self.topology,
-            self.partition,
+            self._partition,
             self.device_plan,
             exchange=exchange,
             selective=EXCHANGES.get(exchange)(self.device_plan),
             executor=self.executor,
+            tile_transform=self.tile_transform,
         )
 
     def __repr__(self) -> str:
+        # repr must not force a lazily loaded plan's payload from disk.
+        combo = "<lazy>" if callable(self._partition) else self.combo
+        if callable(self._matrix):
+            size = "unmaterialized"
+        else:
+            size = f"N={self.matrix.shape[0]}, NNZ={self.matrix.nnz}"
         return (
-            f"SparseSession({self.combo} on {self.topology}, "
-            f"N={self.matrix.shape[0]}, NNZ={self.matrix.nnz}, "
+            f"SparseSession({combo} on {self.topology}, {size}, "
             f"exchange={self.exchange!r}, executor={self.executor!r})"
         )
 
@@ -268,6 +374,7 @@ def distribute(
     block: Union[int, Tuple[int, int]] = 16,
     seed: int = 0,
     cache_dir: Optional[str] = None,
+    cache_budget_bytes: Optional[int] = None,
     **partitioner_kw,
 ) -> SparseSession:
     """Plan the full paper pipeline for ``a`` and return a session.
@@ -283,12 +390,17 @@ def distribute(
     exchange hides behind the tiles whose x the unit already owns;
     DESIGN.md §9).
 
-    ``cache_dir`` enables the persistent plan cache (DESIGN.md §10):
+    ``cache_dir`` enables the persistent plan cache (DESIGN.md §10–§11):
     plans are keyed on (matrix content hash, topology, combo, block,
     exchange, seed, partitioner kwargs); a key seen before in this
     process returns a re-wrapped session without re-planning, a key
-    found on disk loads ``plan-<key>.npz``, and a miss plans then
-    writes the file so sibling serving processes warm-start.
+    found on disk lazily loads ``plan-<key>.npz`` (tile payloads
+    materialize when an executor first needs them), and a miss plans
+    then writes the file so sibling serving processes warm-start.
+    ``cache_budget_bytes`` bounds the directory: after a write, plan
+    files are LRU-pruned (least-recently *used*, by access time) until
+    the total drops under the budget — see
+    :func:`repro.api.plancache.gc`.
     """
     bm, bn = (block, block) if isinstance(block, int) else block
     if cache_dir is not None:
@@ -303,8 +415,11 @@ def distribute(
             block=(bm, bn),
             seed=seed,
             cache_dir=cache_dir,
+            cache_budget_bytes=cache_budget_bytes,
             partitioner_kw=partitioner_kw or None,
         )
+    if cache_budget_bytes is not None:
+        raise ValueError("cache_budget_bytes requires cache_dir")
     part = resolve_partitioner(combo)(a, topology, seed=seed, **partitioner_kw)
     dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
     sp = EXCHANGES.get(exchange)(dp)

@@ -67,6 +67,7 @@ __all__ = [
     "make_simulate_fn",
     "make_pmvc_step",
     "make_unit_mesh",
+    "hoist_tiles",
     "phase_costs",
     "unblock_y",
     "pad_x",
@@ -89,6 +90,27 @@ MESSAGE_OVERHEAD_BYTES = 512
 # golden tests are deterministic.
 MODEL_LINK_BYTES_PER_S = 1.25e9
 MODEL_UNIT_FLOPS_PER_S = 5.0e10
+
+
+# Host ufuncs with a device twin: applying the twin *after* the host→
+# device transfer keeps the value-view fast path copy-free on the host —
+# np.abs on a jax array would bounce through host memory instead.
+_DEVICE_UFUNC = {np.absolute: jnp.abs, abs: jnp.abs, np.sign: jnp.sign,
+                 np.negative: jnp.negative, np.square: jnp.square}
+
+
+def hoist_tiles(tiles: np.ndarray, transform=None) -> jax.Array:
+    """Move a tile payload to device, applying an optional elementwise
+    value transform (a :meth:`SparseSession.with_value_map` view): known
+    ufuncs run on device after the transfer, anything else is applied to
+    the host array on the way in (one transient host copy, never a
+    persistent one)."""
+    if transform is None:
+        return jnp.asarray(tiles)
+    dev = _DEVICE_UFUNC.get(transform)
+    if dev is not None:
+        return dev(jnp.asarray(tiles))
+    return jnp.asarray(np.asarray(transform(np.asarray(tiles)), np.float32))
 
 
 def pad_x(x: np.ndarray, ncb: int, bn: int) -> np.ndarray:
@@ -183,6 +205,7 @@ def make_simulate_fn(
     selective: ExchangePlan = None,
     *,
     jit: bool = False,
+    transform=None,
 ) -> Callable[[jax.Array], jax.Array]:
     """Build ``run(xb) -> y_blocks``, the vmap-over-units PMVC on padded
     x blocks (``[NCB, bn]`` or ``[NCB, bn, B]`` → ``[NRB, bm(, B)]``).
@@ -196,12 +219,14 @@ def make_simulate_fn(
     closure (the ``simulate`` executor, the ``device_loop`` solver fast
     path) never re-pay host→device conversion per call. The closure is
     pure JAX, so it can be jitted (``jit=True``) and traced inside
-    ``lax.fori_loop`` / ``while_loop`` solver bodies.
+    ``lax.fori_loop`` / ``while_loop`` solver bodies. ``transform`` is
+    the optional value-view map applied to tile payloads at hoist time
+    (see :func:`hoist_tiles`).
     """
     nrb = plan.num_row_blocks
     if isinstance(selective, OverlapPlan):
-        return _make_simulate_overlap_fn(plan, selective, jit=jit)
-    tiles = jnp.asarray(plan.tiles)
+        return _make_simulate_overlap_fn(plan, selective, jit=jit, transform=transform)
+    tiles = hoist_tiles(plan.tiles, transform)
     tile_row = jnp.asarray(plan.tile_row)
 
     if selective is None:
@@ -239,7 +264,7 @@ def make_simulate_fn(
 
 
 def _make_simulate_overlap_fn(
-    plan: DevicePlan, op: OverlapPlan, *, jit: bool = False
+    plan: DevicePlan, op: OverlapPlan, *, jit: bool = False, transform=None
 ) -> Callable[[jax.Array], jax.Array]:
     """Overlapped vmap path: local tiles contract straight from the
     owned x shard (no dependency on the emulated all_to_all), halo tiles
@@ -247,10 +272,10 @@ def _make_simulate_overlap_fn(
     shard_map step exposes to XLA's async collectives."""
     nrb = plan.num_row_blocks
     sp = op.selective
-    local_tiles = jnp.asarray(op.local_tiles)
+    local_tiles = hoist_tiles(op.local_tiles, transform)
     local_row = jnp.asarray(op.local_row)
     local_slot = jnp.asarray(op.local_slot)
-    halo_tiles = jnp.asarray(op.halo_tiles)
+    halo_tiles = hoist_tiles(op.halo_tiles, transform)
     halo_row = jnp.asarray(op.halo_row)
     halo_slot = jnp.asarray(op.halo_slot)
     owned = jnp.asarray(sp.owned)  # [U, per]

@@ -25,7 +25,7 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from repro.sparse.bell import split_tiles_local_halo
+from repro.sparse.bell import split_tiles_local_halo, stack_ragged
 from repro.sparse.formats import COO
 
 __all__ = [
@@ -36,6 +36,7 @@ __all__ = [
     "pack_units",
     "build_selective_plan",
     "build_overlap_plan",
+    "tile_col_local_from",
 ]
 
 
@@ -248,17 +249,13 @@ def pack_units(
 
     counts = np.bincount(t_unit, minlength=num_units)
     t_max = max(int(counts.max(initial=0)), 1)
-    tiles = np.zeros((num_units, t_max, bm, bn), dtype=np.float32)
-    tile_row = np.zeros((num_units, t_max), dtype=np.int32)
-    tile_col = np.zeros((num_units, t_max), dtype=np.int32)
-    for u in range(num_units):
-        sel = np.nonzero(t_unit == u)[0]
-        srt = np.argsort(t_rb[sel], kind="stable")
-        sel = sel[srt]
-        k = sel.shape[0]
-        tiles[u, :k] = all_tiles[sel]
-        tile_row[u, :k] = t_rb[sel]
-        tile_col[u, :k] = t_cb[sel]
+    # `uniq` is ascending, i.e. (unit, block-row, block-col)-ordered: each
+    # unit's tiles already sit consecutively in the stable by-row order
+    # the old per-unit argsort produced, so one ragged scatter replaces
+    # the Python loop over units (bit-identical output).
+    tiles = stack_ragged(all_tiles, counts, t_max)
+    tile_row = stack_ragged(t_rb, counts, t_max)
+    tile_col = stack_ragged(t_cb, counts, t_max)
     return DevicePlan(
         shape=a.shape,
         bm=bm,
@@ -271,65 +268,88 @@ def pack_units(
     )
 
 
+def tile_col_local_from(
+    needed: np.ndarray, tile_col: np.ndarray, num_col_blocks: int
+) -> np.ndarray:
+    """Per-tile index into the compact W workspace, rebuilt from the
+    ``needed`` rows (each unit's sorted unique block-cols, −1 padded) and
+    the padded ``[U, T]`` ``tile_col`` — the derivation
+    :func:`build_selective_plan` uses, exposed so the sparse plan-store
+    format can drop ``tile_col_local`` from the archive and reconstruct
+    it bitwise on load."""
+    u_n = needed.shape[0]
+    lut = np.zeros((u_n, num_col_blocks), dtype=np.int32)
+    uu, ii = np.nonzero(needed >= 0)
+    lut[uu, needed[uu, ii]] = ii.astype(np.int32)
+    return np.take_along_axis(lut, tile_col.astype(np.int64), axis=1)
+
+
 def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
-    """Derive the static all_to_all schedule from the tile structure."""
+    """Derive the static all_to_all schedule from the tile structure.
+
+    Fully vectorized (numpy segment ops over the sorted (unit, block)
+    pairs — no per-needed-block Python); output is bit-identical to the
+    original per-unit loop, which `tests/test_pack_golden.py` pins.
+    """
     u_n = plan.num_units
     ncb = plan.num_col_blocks
     # x ownership: contiguous block-col ranges (matches how an iterative
     # solver leaves y sharded by rows == next x sharded by the same map).
+    # Trailing units own nothing when NCB < U * per.
     per = -(-ncb // u_n)
+    blocks = np.arange(ncb, dtype=np.int64)
     owned = np.full((u_n, per), -1, dtype=np.int32)
-    for u in range(u_n):
-        # Trailing units own nothing when NCB < U * per.
-        lo, hi = min(u * per, ncb), min((u + 1) * per, ncb)
-        owned[u, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
-    owner_of_block = np.zeros(ncb, dtype=np.int32)
-    local_of_block = np.zeros(ncb, dtype=np.int32)
-    for u in range(u_n):
-        for l, g in enumerate(owned[u]):
-            if g >= 0:
-                owner_of_block[g] = u
-                local_of_block[g] = l
+    owned[blocks // per, blocks % per] = blocks.astype(np.int32)
+    owner_of_block = (blocks // per).astype(np.int32)
+    local_of_block = (blocks % per).astype(np.int32)
 
-    # Needed block-cols per unit (C_Xk at tile granularity).
-    needed_sets = []
-    for u in range(u_n):
-        k = int(plan.real_tiles[u])
-        needed_sets.append(np.unique(plan.tile_col[u, :k]))
-    w_max = max(max((s.shape[0] for s in needed_sets), default=1), 1)
+    # Needed block-cols per unit (C_Xk at tile granularity): unique
+    # (unit, block) pairs over the real tiles. The sorted pair keys give
+    # every unit's needed set contiguously, in ascending block order —
+    # exactly the old per-unit np.unique output.
+    t_idx = np.arange(plan.tile_col.shape[1], dtype=np.int64)
+    real = t_idx[None, :] < plan.real_tiles[:, None]
+    pair_key = (np.arange(u_n, dtype=np.int64)[:, None] * ncb + plan.tile_col)[real]
+    pairs = np.unique(pair_key)
+    pu = pairs // ncb  # destination unit of each needed block
+    pg = (pairs % ncb).astype(np.int32)  # global block-col
+    w_counts = np.bincount(pu, minlength=u_n)
+    w_max = max(int(w_counts.max(initial=0)), 1)
+    w_off = np.zeros(u_n + 1, dtype=np.int64)
+    np.cumsum(w_counts, out=w_off[1:])
+    slot = np.arange(pairs.shape[0], dtype=np.int64) - w_off[pu]
 
-    # Routes: blocks unit v must send to unit u.
-    route: list[list[list[int]]] = [[[] for _ in range(u_n)] for _ in range(u_n)]
-    for u in range(u_n):
-        for g in needed_sets[u]:
-            route[owner_of_block[g]][u].append(int(g))
-    lanes = max(max(len(route[v][u]) for v in range(u_n) for u in range(u_n)), 1)
+    needed = np.full((u_n, w_max), -1, dtype=np.int32)
+    needed[pu, slot] = pg
+
+    # Routes: blocks unit v must send to unit u, ascending block order.
+    # Lane of a block = its rank inside its (v, u) route; sorting the
+    # pairs by (dst, src, block) makes each route a contiguous run.
+    src = owner_of_block[pg].astype(np.int64)
+    order = np.lexsort((pg, src, pu))
+    run_key = pu[order] * u_n + src[order]
+    new_run = np.ones(run_key.shape[0], dtype=bool)
+    new_run[1:] = run_key[1:] != run_key[:-1]
+    run_start = np.nonzero(new_run)[0]
+    run_id = np.cumsum(new_run) - 1
+    lane_sorted = np.arange(run_key.shape[0], dtype=np.int64) - run_start[run_id]
+    lanes = max(int(lane_sorted.max(initial=-1)) + 1, 1)
 
     send_idx = np.full((u_n, u_n, lanes), -1, dtype=np.int32)
-    for v in range(u_n):
-        for u in range(u_n):
-            for l, g in enumerate(route[v][u]):
-                send_idx[v, u, l] = local_of_block[g]
+    send_idx[src[order], pu[order], lane_sorted] = local_of_block[pg[order]]
 
     recv_src = np.zeros((u_n, w_max), dtype=np.int32)
     recv_lane = np.zeros((u_n, w_max), dtype=np.int32)
-    needed = np.full((u_n, w_max), -1, dtype=np.int32)
-    for u in range(u_n):
-        for i, g in enumerate(needed_sets[u]):
-            v = owner_of_block[g]
-            lane = route[v][u].index(int(g))
-            recv_src[u, i] = v
-            recv_lane[u, i] = lane
-            needed[u, i] = g
+    recv_src[pu, slot] = src.astype(np.int32)
+    lane_of_pair = np.empty(pairs.shape[0], dtype=np.int64)
+    lane_of_pair[order] = lane_sorted
+    recv_lane[pu, slot] = lane_of_pair.astype(np.int32)
 
-    # Per-tile index into the compact workspace.
-    tile_col_local = np.zeros_like(plan.tile_col)
-    for u in range(u_n):
-        lut = np.zeros(ncb, dtype=np.int32)
-        lut[needed_sets[u]] = np.arange(needed_sets[u].shape[0], dtype=np.int32)
-        tile_col_local[u] = lut[plan.tile_col[u]]
+    tile_col_local = tile_col_local_from(needed, plan.tile_col, ncb).astype(
+        plan.tile_col.dtype
+    )
 
-    wire = int(sum(len(route[v][u]) for v in range(u_n) for u in range(u_n) if v != u))
+    wire = int((src != pu).sum())
     naive = (u_n - 1) * ncb  # all-gather: every unit receives all remote blocks
     return SelectivePlan(
         num_units=u_n,

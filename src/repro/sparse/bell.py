@@ -31,7 +31,45 @@ __all__ = [
     "tile_counts",
     "pad_x_blocks",
     "split_tiles_local_halo",
+    "stack_ragged",
+    "ragged_from_stacked",
 ]
+
+
+def stack_ragged(
+    flat: np.ndarray, counts: np.ndarray, t: int | None = None
+) -> np.ndarray:
+    """Scatter a unit-major ragged concatenation into zero-padded stacked
+    form: ``flat`` holds unit 0's ``counts[0]`` entries, then unit 1's,
+    ...; the result is ``[U, T, ...]`` with each unit's entries in their
+    original order and zero padding past ``counts[u]`` (``T =
+    max(counts, 1)`` unless given). The shared re-pad primitive behind
+    the vectorized :func:`repro.pmvc.plan_device.pack_units` and the
+    sparse (v2) plan-store format, which persists only real tiles and
+    rebuilds padding on load.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    u = counts.shape[0]
+    if t is None:
+        t = max(int(counts.max(initial=0)), 1)
+    offsets = np.zeros(u + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    total = int(offsets[-1])
+    if flat.shape[0] != total:
+        raise ValueError(f"flat has {flat.shape[0]} entries, counts sum to {total}")
+    unit = np.repeat(np.arange(u, dtype=np.int64), counts)
+    within = np.arange(total, dtype=np.int64) - offsets[unit]
+    out = np.zeros((u * t,) + flat.shape[1:], dtype=flat.dtype)
+    out[unit * t + within] = flat
+    return out.reshape((u, t) + flat.shape[1:])
+
+
+def ragged_from_stacked(stacked: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`stack_ragged`: drop the padding, returning the
+    unit-major concatenation of each unit's first ``counts[u]`` entries."""
+    counts = np.asarray(counts, dtype=np.int64)
+    mask = np.arange(stacked.shape[1], dtype=np.int64)[None, :] < counts[:, None]
+    return stacked[mask]
 
 
 def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:

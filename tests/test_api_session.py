@@ -239,6 +239,43 @@ def test_pagerank_auto_probability_vector_on_paper_suite(name):
     assert res.residuals[-1] <= res.residuals[0]
 
 
+def test_with_value_map_is_a_zero_copy_view(problem):
+    """The |A| link matrix pagerank(normalize="auto") builds must not
+    duplicate tile storage: with_value_map returns a value *view* — the
+    device_plan (and overlap local/halo payloads) are the same objects,
+    the transform rides along to device-hoist time — while executing
+    bit-identically to an eagerly materialized copy."""
+    a, x, _ = problem
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HC", exchange="overlap")
+    view = sess.with_value_map(np.abs)
+    # No tile-array copy, anywhere: plan objects are shared outright.
+    assert view.device_plan is sess.device_plan
+    assert view.device_plan.tiles is sess.device_plan.tiles
+    assert view.selective is sess.selective
+    assert view.selective.local_tiles is sess.selective.local_tiles
+    assert view.tile_transform is np.abs
+    np.testing.assert_array_equal(view.matrix.val, np.abs(a.val))
+    # ...and the view computes exactly what the materialized copy does.
+    copy = sess.with_value_map(np.abs, materialize=True)
+    assert copy.device_plan.tiles is not sess.device_plan.tiles
+    for ex in ("simulate", "reference"):
+        assert np.array_equal(
+            np.asarray(view.spmv(x, executor=ex)),
+            np.asarray(copy.spmv(x, executor=ex)),
+        ), ex
+    # Views compose (abs ∘ negate == abs), still without copying tiles.
+    twice = view.with_value_map(np.negative).with_value_map(np.abs)
+    assert twice.device_plan.tiles is sess.device_plan.tiles
+    assert np.array_equal(
+        np.asarray(twice.spmv(x)), np.asarray(view.spmv(x))
+    )
+    # pagerank's cached |A| link session rides the view: same storage.
+    res = sess.solve("pagerank", iters=8)
+    assert np.isclose(res.x.sum(), 1.0, atol=1e-4)
+    link = sess._abs_link[0]
+    assert link.device_plan.tiles is sess.device_plan.tiles
+
+
 def test_pagerank_normalize_none_keeps_raw_behavior(problem):
     """`normalize="none"` opts into the historical raw iteration — on a
     non-stochastic matrix the fixed point is NOT a probability vector."""

@@ -1,0 +1,178 @@
+"""Golden pins for the vectorized ``pack_units`` / ``build_selective_plan``.
+
+PR 5 replaced both functions' per-unit Python loops with numpy segment
+ops. Unlike the FM/NEZGT refinement pins (``test_plan_golden.py``,
+quality ≤ pre-refactor), packing and exchange planning are *derivations*
+— there is exactly one right answer, so the pin is **exact array
+equality** against the pre-refactor loop implementations (kept below as
+the executable reference) on seeded PAPER_SUITE cells. If a future
+change breaks a cell, fix the vectorization — never weaken the
+comparison.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import Topology, resolve_partitioner
+from repro.pmvc.plan_device import (
+    DevicePlan,
+    SelectivePlan,
+    build_selective_plan,
+    pack_units,
+)
+from repro.sparse.generate import PAPER_SUITE, generate
+
+
+def _pack_units_reference(a, elem_unit, num_units, bm, bn):
+    """Pre-refactor (commit 2b6b6ef) per-unit-loop implementation."""
+    nrb = -(-a.shape[0] // bm)
+    ncb = -(-a.shape[1] // bn)
+    rb = (a.row // bm).astype(np.int64)
+    cb = (a.col // bn).astype(np.int64)
+    key = (elem_unit.astype(np.int64) * nrb + rb) * ncb + cb
+    uniq, tile_of_elem = np.unique(key, return_inverse=True)
+    all_tiles = np.zeros((uniq.shape[0], bm, bn), dtype=np.float32)
+    all_tiles[tile_of_elem, a.row % bm, a.col % bn] = a.val.astype(np.float32)
+    t_unit = (uniq // (nrb * ncb)).astype(np.int64)
+    t_rb = ((uniq // ncb) % nrb).astype(np.int32)
+    t_cb = (uniq % ncb).astype(np.int32)
+
+    counts = np.bincount(t_unit, minlength=num_units)
+    t_max = max(int(counts.max(initial=0)), 1)
+    tiles = np.zeros((num_units, t_max, bm, bn), dtype=np.float32)
+    tile_row = np.zeros((num_units, t_max), dtype=np.int32)
+    tile_col = np.zeros((num_units, t_max), dtype=np.int32)
+    for u in range(num_units):
+        sel = np.nonzero(t_unit == u)[0]
+        srt = np.argsort(t_rb[sel], kind="stable")
+        sel = sel[srt]
+        k = sel.shape[0]
+        tiles[u, :k] = all_tiles[sel]
+        tile_row[u, :k] = t_rb[sel]
+        tile_col[u, :k] = t_cb[sel]
+    return DevicePlan(
+        shape=a.shape, bm=bm, bn=bn, num_units=num_units,
+        tiles=tiles, tile_row=tile_row, tile_col=tile_col,
+        real_tiles=counts.astype(np.int64),
+    )
+
+
+def _build_selective_plan_reference(plan):
+    """Pre-refactor (commit 2b6b6ef) per-needed-block loop implementation."""
+    u_n = plan.num_units
+    ncb = plan.num_col_blocks
+    per = -(-ncb // u_n)
+    owned = np.full((u_n, per), -1, dtype=np.int32)
+    for u in range(u_n):
+        lo, hi = min(u * per, ncb), min((u + 1) * per, ncb)
+        owned[u, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+    owner_of_block = np.zeros(ncb, dtype=np.int32)
+    local_of_block = np.zeros(ncb, dtype=np.int32)
+    for u in range(u_n):
+        for l, g in enumerate(owned[u]):
+            if g >= 0:
+                owner_of_block[g] = u
+                local_of_block[g] = l
+
+    needed_sets = []
+    for u in range(u_n):
+        k = int(plan.real_tiles[u])
+        needed_sets.append(np.unique(plan.tile_col[u, :k]))
+    w_max = max(max((s.shape[0] for s in needed_sets), default=1), 1)
+
+    route = [[[] for _ in range(u_n)] for _ in range(u_n)]
+    for u in range(u_n):
+        for g in needed_sets[u]:
+            route[owner_of_block[g]][u].append(int(g))
+    lanes = max(max(len(route[v][u]) for v in range(u_n) for u in range(u_n)), 1)
+
+    send_idx = np.full((u_n, u_n, lanes), -1, dtype=np.int32)
+    for v in range(u_n):
+        for u in range(u_n):
+            for l, g in enumerate(route[v][u]):
+                send_idx[v, u, l] = local_of_block[g]
+
+    recv_src = np.zeros((u_n, w_max), dtype=np.int32)
+    recv_lane = np.zeros((u_n, w_max), dtype=np.int32)
+    needed = np.full((u_n, w_max), -1, dtype=np.int32)
+    for u in range(u_n):
+        for i, g in enumerate(needed_sets[u]):
+            v = owner_of_block[g]
+            recv_src[u, i] = v
+            recv_lane[u, i] = route[v][u].index(int(g))
+            needed[u, i] = g
+
+    tile_col_local = np.zeros_like(plan.tile_col)
+    for u in range(u_n):
+        lut = np.zeros(ncb, dtype=np.int32)
+        lut[needed_sets[u]] = np.arange(needed_sets[u].shape[0], dtype=np.int32)
+        tile_col_local[u] = lut[plan.tile_col[u]]
+
+    wire = int(sum(len(route[v][u]) for v in range(u_n) for u in range(u_n) if v != u))
+    return SelectivePlan(
+        num_units=u_n, blocks_per_unit=per, lanes=lanes, owned=owned,
+        send_idx=send_idx, recv_src=recv_src, recv_lane=recv_lane,
+        needed=needed, tile_col_local=tile_col_local,
+        wire_blocks=wire, naive_blocks=(u_n - 1) * ncb,
+    )
+
+
+# Representative PAPER_SUITE cells: the four structure classes the paper
+# distinguishes, under two topologies and a non-square block.
+CELLS = [
+    ("bcsstm09", Topology(2, 2), 16, 16),
+    ("thermal", Topology(4, 2), 16, 16),
+    ("t2dal", Topology(2, 2), 8, 16),
+    ("epb1", Topology(4, 4), 16, 16),
+    ("af23560", Topology(2, 4), 16, 16),
+]
+
+_MATRICES = {}
+
+
+def _matrix(name):
+    if name not in _MATRICES:
+        _MATRICES[name] = generate(PAPER_SUITE[name])
+    return _MATRICES[name]
+
+
+def _assert_same_fields(new, ref, cls, tag):
+    for f in (x.name for x in dataclasses.fields(cls)):
+        va, vb = getattr(new, f), getattr(ref, f)
+        if isinstance(vb, np.ndarray):
+            assert va.dtype == vb.dtype, (tag, f, va.dtype, vb.dtype)
+            np.testing.assert_array_equal(va, vb, err_msg=f"{tag}: {f}")
+        else:
+            assert va == vb, (tag, f, va, vb)
+
+
+@pytest.mark.parametrize("name,topo,bm,bn", CELLS)
+def test_pack_and_selective_match_reference_exactly(name, topo, bm, bn):
+    a = _matrix(name)
+    part = resolve_partitioner("NL-HC")(a, topo, seed=0)
+    new_dp = pack_units(a, part.elem_unit, topo.units, bm, bn)
+    ref_dp = _pack_units_reference(a, part.elem_unit, topo.units, bm, bn)
+    _assert_same_fields(new_dp, ref_dp, DevicePlan, f"{name} pack_units")
+    new_sp = build_selective_plan(new_dp)
+    ref_sp = _build_selective_plan_reference(ref_dp)
+    _assert_same_fields(new_sp, ref_sp, SelectivePlan, f"{name} selective")
+
+
+def test_degenerate_unit_layouts_match_reference():
+    """Empty units (all elements on one unit of many) and more units
+    than column blocks — the padding edge cases."""
+    a = _matrix("bcsstm09")
+    for units, elem_unit in (
+        (6, np.zeros(a.nnz, dtype=np.int32)),
+        (3, (np.arange(a.nnz) % 3).astype(np.int32)),
+    ):
+        new_dp = pack_units(a, elem_unit, units, 64, 64)
+        ref_dp = _pack_units_reference(a, elem_unit, units, 64, 64)
+        _assert_same_fields(new_dp, ref_dp, DevicePlan, f"degenerate u={units}")
+        _assert_same_fields(
+            build_selective_plan(new_dp),
+            _build_selective_plan_reference(ref_dp),
+            SelectivePlan,
+            f"degenerate selective u={units}",
+        )

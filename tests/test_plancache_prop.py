@@ -1,0 +1,118 @@
+"""Property-based plan-store round-trip: save → cold load → bitwise spmv.
+
+The plan store's contract (DESIGN.md §11) is that serialization is
+invisible: for *any* (matrix × topology × combo × exchange × block)
+planning run, saving and cold-loading the session — through either the
+current sparse v2 format or a legacy v1 archive — must reproduce
+``spmv`` bit-for-bit on every in-process executor, single vector and
+batched. Hypothesis drives randomized shapes when available (CI installs
+it; ``_hypothesis_compat`` skips otherwise); the seeded sweep below
+covers the same property offline, plus the lazy/eager load split.
+(True cross-*process* cold loads, including shard_map, are pinned by
+``test_plancache.py::test_shard_map_warm_start_subprocess``.)
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import repro.api.plancache as plancache
+from repro.api import SparseSession, Topology, distribute
+from repro.sparse.generate import banded_coo, powerlaw_coo, random_coo
+
+COMBOS = ("NL-HL", "NL-HC", "NC-HL", "NC-HC")
+EXCHANGES = ("replicated", "selective", "overlap")
+
+
+def _round_trip_case(a, topo, combo, exchange, block, version, lazy=True):
+    sess = distribute(a, topology=topo, combo=combo, exchange=exchange, block=block)
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    xs = rng.standard_normal((3, a.shape[1])).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "plan.npz")
+        sess.save(path, format_version=version)
+        plancache.clear_memo()  # cold: nothing shared in-process
+        loaded = SparseSession.load(path, lazy=lazy)
+
+        # Planning arrays round-trip exactly...
+        np.testing.assert_array_equal(
+            loaded.partition.elem_unit, sess.partition.elem_unit
+        )
+        for f in ("tiles", "tile_row", "tile_col", "real_tiles"):
+            np.testing.assert_array_equal(
+                getattr(loaded.device_plan, f), getattr(sess.device_plan, f),
+                err_msg=f"device_plan.{f} (v{version})",
+            )
+        assert loaded.costs() == sess.costs()
+        # ...so execution is bitwise identical on every in-process
+        # executor, single and batched.
+        for ex in ("simulate", "reference"):
+            for xin in (x, xs):
+                ya = np.asarray(sess.spmv(xin, executor=ex))
+                yb = np.asarray(loaded.spmv(xin, executor=ex))
+                assert np.array_equal(ya, yb), (combo, exchange, ex, version)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=48, max_value=320),
+    density=st.integers(min_value=2, max_value=10),
+    nodes=st.integers(min_value=2, max_value=4),
+    cores=st.integers(min_value=1, max_value=3),
+    combo_i=st.integers(min_value=0, max_value=3),
+    exchange_i=st.integers(min_value=0, max_value=2),
+    block=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+    version=st.sampled_from([1, 2]),
+)
+def test_round_trip_property(
+    n, density, nodes, cores, combo_i, exchange_i, block, seed, version
+):
+    a = random_coo(n, n * density, seed=seed)
+    _round_trip_case(
+        a, Topology(nodes, cores), COMBOS[combo_i], EXCHANGES[exchange_i],
+        block, version,
+    )
+
+
+@pytest.mark.parametrize(
+    "gen,n,nnz,topo,combo,exchange,block,version,lazy",
+    [
+        (random_coo, 128, 1200, Topology(2, 2), "NL-HL", "selective", 16, 2, True),
+        (random_coo, 128, 1200, Topology(2, 2), "NL-HL", "selective", 16, 1, True),
+        (banded_coo, 256, 3000, Topology(2, 3), "NL-HC", "overlap", 16, 2, True),
+        (banded_coo, 256, 3000, Topology(2, 3), "NL-HC", "overlap", 16, 1, False),
+        (powerlaw_coo, 300, 4500, Topology(3, 2), "NC-HL", "replicated", 8, 2, False),
+        (powerlaw_coo, 222, 2200, Topology(2, 2), "nezgt", "selective", 16, 2, True),
+        (random_coo, 333, 4000, Topology(2, 4), "NC-HC", "overlap", 8, 1, True),
+        (banded_coo, 191, 2000, Topology(4, 1), "hyper", "replicated", 16, 2, True),
+    ],
+)
+def test_round_trip_seeded_sweep(gen, n, nnz, topo, combo, exchange, block, version, lazy):
+    """Offline-friendly instantiation of the same property, covering all
+    exchanges × both formats × lazy and eager loads."""
+    _round_trip_case(gen(n, nnz, seed=n + nnz), topo, combo, exchange, block,
+                     version, lazy=lazy)
+
+
+def test_round_trip_survives_value_view():
+    """Saving a with_value_map view bakes the transform into the archive
+    (the file stores values, not a recipe): the loaded session matches
+    the view bitwise."""
+    a = random_coo(150, 1800, seed=5)
+    x = np.random.default_rng(1).standard_normal(150).astype(np.float32)
+    sess = distribute(a, topology=Topology(2, 2), combo="NL-HC", exchange="overlap")
+    view = sess.with_value_map(np.abs)
+    with tempfile.TemporaryDirectory() as d:
+        path = view.save(os.path.join(d, "plan.npz"))
+        loaded = SparseSession.load(path)
+        assert loaded.tile_transform is None  # baked, not recorded
+        np.testing.assert_array_equal(loaded.matrix.val, np.abs(a.val))
+        for ex in ("simulate", "reference"):
+            assert np.array_equal(
+                np.asarray(view.spmv(x, executor=ex)),
+                np.asarray(loaded.spmv(x, executor=ex)),
+            )
