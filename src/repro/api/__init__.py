@@ -62,6 +62,7 @@ from repro.api.partitioners import (
 )
 from repro.api import plancache
 from repro.api.plancache import (
+    hydrate_session,
     load_session,
     plan_key,
     save_session,
@@ -69,7 +70,14 @@ from repro.api.plancache import (
 )
 from repro.api.registry import Registry
 from repro.api.session import SparseSession, distribute
-from repro.api.solvers import SOLVERS, SolveResult, register_solver
+from repro.api.solvers import (
+    SOLVERS,
+    STEPPERS,
+    BatchStepper,
+    SolveResult,
+    register_solver,
+    register_stepper,
+)
 from repro.api.topology import Topology
 
 __all__ = [
@@ -77,20 +85,24 @@ __all__ = [
     "distribute",
     "SparseSession",
     "SolveResult",
+    "BatchStepper",
     "PartitionResult",
     "Registry",
     "PARTITIONERS",
     "EXCHANGES",
     "EXECUTORS",
     "SOLVERS",
+    "STEPPERS",
     "register_partitioner",
     "register_exchange",
     "register_executor",
     "register_solver",
+    "register_stepper",
     "resolve_partitioner",
     "plan_key",
     "save_session",
     "load_session",
+    "hydrate_session",
     "set_memo_limit",
     "plancache",
 ]

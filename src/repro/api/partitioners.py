@@ -108,6 +108,25 @@ class PartitionResult:
         return self.plan.modeled_cost(**kw)
 
 
+def _fm_budget(
+    fm_passes: Optional[int],
+    fm_kicks: Optional[int],
+    fm_screen_slack: Optional[int],
+) -> Optional[dict]:
+    """Collect non-default FM refinement budget overrides into the
+    ``fm_kw`` dict the core partitioning layer consumes (None = library
+    default, key omitted so :func:`partition_hypergraph` defaults
+    apply)."""
+    kw = {}
+    if fm_passes is not None:
+        kw["passes"] = int(fm_passes)
+    if fm_kicks is not None:
+        kw["kicks"] = int(fm_kicks)
+    if fm_screen_slack is not None:
+        kw["screen_slack"] = int(fm_screen_slack)
+    return kw or None
+
+
 def _combo_partitioner(combo: str) -> Callable:
     def run(
         a: COO,
@@ -115,9 +134,13 @@ def _combo_partitioner(combo: str) -> Callable:
         *,
         seed: int = 0,
         timings: Optional[dict] = None,
+        fm_passes: Optional[int] = None,
+        fm_kicks: Optional[int] = None,
+        fm_screen_slack: Optional[int] = None,
     ) -> PartitionResult:
         plan = two_level_partition(
-            a, topology.nodes, topology.cores, combo, seed=seed, timings=timings
+            a, topology.nodes, topology.cores, combo, seed=seed, timings=timings,
+            fm_kw=_fm_budget(fm_passes, fm_kicks, fm_screen_slack),
         )
         elem_unit = topology.unit_of(plan.elem_node, plan.elem_core)
         return PartitionResult(
@@ -134,21 +157,30 @@ for _combo in PAPER_COMBOS:
 
 def _flat_partitioner(method: str) -> Callable:
     def run(
-        a: COO, topology: Topology, *, seed: int = 0, dim: str = "rows"
+        a: COO,
+        topology: Topology,
+        *,
+        seed: int = 0,
+        dim: str = "rows",
+        fm_passes: Optional[int] = None,
+        fm_kicks: Optional[int] = None,
+        fm_screen_slack: Optional[int] = None,
     ) -> PartitionResult:
         cut = None
+        fm_kw = _fm_budget(fm_passes, fm_kicks, fm_screen_slack)
         if method == "hyper":
             # Go through the hypergraph module directly so the real
             # connectivity cut is kept (partition_lines discards it).
             from repro.core import hypergraph as hg
 
             res = hg.partition_hypergraph(
-                hg.hypergraph_from_coo(a, mode=dim), topology.units, seed=seed
+                hg.hypergraph_from_coo(a, mode=dim), topology.units, seed=seed,
+                **(fm_kw or {}),
             )
             assignment, cut = res.assignment, int(res.cut)
         else:
             assignment = partition_lines(
-                a, topology.units, LevelSpec(method, dim), seed=seed
+                a, topology.units, LevelSpec(method, dim), seed=seed, fm_kw=fm_kw
             )
         lines = a.row if dim == "rows" else a.col
         elem_unit = assignment[lines].astype(np.int64)

@@ -84,6 +84,7 @@ __all__ = [
     "plan_key",
     "save_session",
     "load_session",
+    "hydrate_session",
     "cached_distribute",
     "clear_memo",
     "set_memo_limit",
@@ -886,3 +887,30 @@ def cached_distribute(
         if cache_budget_bytes is not None:
             gc(cache_dir, cache_budget_bytes, keep=(path,))
     return sess if sess.executor == executor else sess.with_executor(executor)
+
+
+def hydrate_session(
+    path: str, *, executor: Optional[str] = None, lazy: bool = True
+) -> "SparseSession":
+    """:func:`load_session` fronted by the in-process memo — the serving
+    engine's warm-pool hook.
+
+    The memo key is ``"file:" + abspath`` (a *file* identity, distinct
+    from the plan-key namespace of :func:`cached_distribute`), so
+    repeated hydrations of one saved plan — every request for a
+    registered graph — share a single canonical session: tile payloads
+    materialize once, compiled executor closures are reused via the
+    :meth:`SparseSession.with_executor` re-wrap contract, and
+    :func:`set_memo_limit` bounds how many graphs stay warm (a cold
+    graph is evicted LRU and transparently re-hydrated from disk on its
+    next request)."""
+    key = "file:" + os.path.abspath(path)
+    sess = _MEMO.get(key)
+    if sess is None:
+        sess = load_session(path, executor=executor, lazy=lazy)
+        _memo_put(key, sess)
+    else:
+        _MEMO.move_to_end(key)
+    if executor is not None and sess.executor != executor:
+        return sess.with_executor(executor)
+    return sess

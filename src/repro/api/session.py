@@ -14,7 +14,7 @@ import numpy as np
 from repro.api.exchange import EXCHANGES
 from repro.api.executors import EXECUTORS, SpmvFn
 from repro.api.partitioners import PartitionResult, resolve_partitioner
-from repro.api.solvers import SOLVERS, SolveResult
+from repro.api.solvers import SOLVERS, STEPPERS, BatchStepper, SolveResult
 from repro.api.topology import Topology
 from repro.pmvc.dist import ExchangePlan, phase_costs
 from repro.pmvc.plan_device import DevicePlan, pack_units
@@ -177,6 +177,63 @@ class SparseSession:
         ``SolveResult.iters_run`` (``iters`` is the *budget* argument).
         """
         return SOLVERS.get(solver)(self, **kw)
+
+    def batch_stepper(self, solver: str, slots: int, **config) -> BatchStepper:
+        """Instantiate the slot-batched stepper for a registered
+        steppable solver (``"pagerank"``, ``"jacobi"``, ``"spmv"``) —
+        the unit the serving engine schedules. ``config`` is the
+        solver's per-lane configuration (e.g. ``damping=`` for
+        pagerank); requests sharing a stepper must share it."""
+        return STEPPERS.get(solver)(self, slots, **config)
+
+    def solve_batch(
+        self,
+        solver: str,
+        payloads: list,
+        *,
+        iters: int = 50,
+        tol: float = 0.0,
+        **config,
+    ) -> list:
+        """Solve B independent requests through one slot-batched stepper
+        — one batched SpMM per iteration for the whole group.
+
+        ``payloads`` is a list of per-request keyword dicts (what
+        ``seeds=`` / ``b=`` / ``x=`` would be on a direct solve, with
+        1-D ``[N]`` operands). Returns one :class:`SolveResult` per
+        payload, each bitwise equal to the matching direct batched-of-1
+        ``solve`` call; per-request tol early-stop freezes converged
+        slots without stopping the rest.
+        """
+        stepper = self.batch_stepper(solver, len(payloads), **config)
+        nreq = len(payloads)
+        for i, payload in enumerate(payloads):
+            stepper.load(i, **payload)
+        budget = iters if stepper.fixed_iters is None else stepper.fixed_iters
+        active = np.ones(nreq, dtype=bool)
+        residuals: list = [[] for _ in range(nreq)]
+        for _ in range(budget):
+            if not active.any():
+                break
+            res = stepper.step(active)
+            for i in np.nonzero(active)[0]:
+                residuals[i].append(float(res[i]))
+                if tol and res[i] < tol:
+                    active[i] = False
+        out = []
+        for i in range(nreq):
+            hist = residuals[i]
+            out.append(
+                SolveResult(
+                    solver=solver,
+                    x=stepper.extract(i),
+                    value=hist[-1] if hist else 0.0,
+                    residuals=hist,
+                    iters_run=len(hist),
+                    converged=bool(tol and hist and hist[-1] < tol),
+                )
+            )
+        return out
 
     # -- persistence -------------------------------------------------------
 

@@ -37,10 +37,25 @@ from repro.api.registry import Registry
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from repro.api.session import SparseSession
 
-__all__ = ["SOLVERS", "SolveResult", "register_solver"]
+__all__ = [
+    "SOLVERS",
+    "STEPPERS",
+    "BatchStepper",
+    "SolveResult",
+    "register_solver",
+    "register_stepper",
+]
 
 SOLVERS = Registry("solver")
 register_solver = SOLVERS.register
+
+# Batch steppers: the slot-granularity serving counterpart of a solver.
+# A registry entry is a factory ``(session, slots, **config) ->
+# BatchStepper`` whose step() advances all ``slots`` lanes of one
+# ``[slots, N]`` state block by exactly one solver iteration through a
+# single SpMM — see :class:`BatchStepper`.
+STEPPERS = Registry("stepper")
+register_stepper = STEPPERS.register
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +80,32 @@ class SolveResult:
     residuals: List[float]
     iters_run: int
     converged: bool
+
+
+def _link_operator(session: "SparseSession"):
+    """``(link, dangling, inv_col)`` for the column-stochastic PageRank
+    operator ``P = |A|·D⁻¹`` (+ dangling-mass restart), cached on the
+    session: |A| shares the plan's tile storage
+    (:meth:`SparseSession.with_value_map`) and the column scan is
+    O(nnz), so repeated pagerank/PPR solves — and the serving engine's
+    batch stepper — pay the tile remap, the column scan, and the
+    executor jit once per session."""
+    a = session.matrix
+    n = a.shape[1]
+    if a.shape[0] != a.shape[1]:
+        raise ValueError(f"pagerank needs a square matrix, got {a.shape}")
+    cached = getattr(session, "_abs_link", None)
+    if cached is None:
+        colsum = np.bincount(
+            a.col, weights=np.abs(a.val.astype(np.float64)), minlength=n
+        )
+        dangling = (colsum == 0.0).astype(np.float32)
+        inv_col = np.where(
+            colsum > 0.0, 1.0 / np.maximum(colsum, 1e-300), 0.0
+        ).astype(np.float32)
+        cached = (session.with_value_map(np.abs), dangling, inv_col)
+        session._abs_link = cached
+    return cached
 
 
 def _diag_of(session: "SparseSession") -> np.ndarray:
@@ -368,25 +409,7 @@ def pagerank(
     r0 = s.copy()
 
     if normalize == "auto":
-        a = session.matrix
-        if a.shape[0] != a.shape[1]:
-            raise ValueError(f"pagerank needs a square matrix, got {a.shape}")
-        # |A| shares the plan; cache it — together with the column
-        # normalization (O(nnz) to derive) — on the session, so repeated
-        # pagerank/PPR solves (the multi-user serving path) pay the tile
-        # remap, the column scan, and the executor jit once.
-        cached = getattr(session, "_abs_link", None)
-        if cached is None:
-            colsum = np.bincount(
-                a.col, weights=np.abs(a.val.astype(np.float64)), minlength=n
-            )
-            dangling = (colsum == 0.0).astype(np.float32)
-            inv_col = np.where(
-                colsum > 0.0, 1.0 / np.maximum(colsum, 1e-300), 0.0
-            ).astype(np.float32)
-            cached = (session.with_value_map(np.abs), dangling, inv_col)
-            session._abs_link = cached
-        link, dangling, inv_col = cached
+        link, dangling, inv_col = _link_operator(session)
     else:
         dangling = inv_col = None
         link = session
@@ -494,3 +517,198 @@ def conjugate_gradient(
         k,
         bool(tol and residuals[-1] < tol),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batch steppers — the slot-granularity serving counterpart of a solver
+
+
+class BatchStepper:
+    """One solver iterating B independent requests through shared SpMMs.
+
+    A stepper owns a fixed ``[slots, N]`` state block. ``load`` writes
+    one request's payload into a slot; ``step(active)`` advances every
+    slot by exactly one solver iteration with a *single* batched SpMM,
+    using ``np.where(active[:, None], new, old)`` selects so inactive
+    slots keep their state **bitwise** frozen; ``extract(slot)`` reads a
+    finished slot's solution row.
+
+    The contract that makes serving results trustworthy: the arithmetic
+    of one slot must be *independent of every other slot* — only
+    per-row ops (the batched SpMM is per-column bitwise stable across
+    batch widths on the simulate executor, reductions are ``axis=-1``)
+    — so a slot's trajectory is bitwise equal to a direct batched-of-1
+    ``session.solve`` with the same payload, whatever else shares the
+    batch and whenever slots join or leave. Solvers whose iterations
+    couple rows (block power iteration's QR re-orthonormalization,
+    power iteration's global norm) cannot be slot-batched and have no
+    stepper entry.
+
+    ``fixed_iters`` (class attribute) caps the per-request iteration
+    budget when a "solver" completes in a known number of steps (the
+    ``spmv`` stepper: 1); ``None`` means the caller's budget applies.
+    """
+
+    solver: str = "?"
+    fixed_iters: Optional[int] = None
+
+    def __init__(self, session: "SparseSession", slots: int):
+        if slots < 1:
+            raise ValueError(f"need at least 1 slot, got {slots}")
+        self.session = session
+        self.slots = int(slots)
+        self.n = session.matrix.shape[1]
+
+    def load(self, slot: int, **payload) -> None:
+        raise NotImplementedError
+
+    def step(self, active: np.ndarray) -> np.ndarray:
+        """Advance one iteration; returns per-slot residuals ``[B]``
+        (inactive slots' entries are meaningless)."""
+        raise NotImplementedError
+
+    def extract(self, slot: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+class _PagerankStepper(BatchStepper):
+    """Slot-batched personalized PageRank — the multi-user serving path.
+
+    Each slot's row follows exactly the host loop of
+    :func:`pagerank`: teleport-normalized seed, damping step, L1
+    renormalization, L1-diff residual. All ops are per-row, so slot
+    trajectories match direct batched-of-1 solves bitwise.
+    """
+
+    solver = "pagerank"
+
+    def __init__(self, session, slots, *, damping=0.85, normalize="auto"):
+        super().__init__(session, slots)
+        if normalize not in ("auto", "none"):
+            raise ValueError(f"normalize must be 'auto' or 'none', got {normalize!r}")
+        self.damping = float(damping)
+        self.normalize = normalize
+        if normalize == "auto":
+            self._link, self._dangling, self._inv_col = _link_operator(session)
+        else:
+            self._link, self._dangling, self._inv_col = session, None, None
+        self.r = np.zeros((self.slots, self.n), np.float32)
+        self.s = np.zeros((self.slots, self.n), np.float32)
+
+    def load(self, slot, *, seeds=None):
+        if seeds is None:
+            s = np.full(self.n, 1.0 / self.n, np.float32)
+        else:
+            s = np.asarray(seeds, np.float32)
+            if s.shape != (self.n,):
+                raise ValueError(f"seeds must be [N={self.n}], got {s.shape}")
+            mass = np.abs(s).sum(axis=-1, keepdims=True)
+            if np.any(mass == 0.0):
+                raise ValueError("each seed row needs non-zero mass")
+            s = s / mass
+        self.s[slot] = s
+        self.r[slot] = s
+
+    def step(self, active):
+        r = self.r
+        if self.normalize == "auto":
+            dmass = (r * self._dangling).sum(axis=-1, keepdims=True)
+            y = self._link.spmv(r * self._inv_col) + dmass * self.s
+        else:
+            y = self._link.spmv(r)
+        r_new = self.damping * y + (1.0 - self.damping) * self.s
+        norm = np.abs(r_new).sum(axis=-1, keepdims=True)
+        r_new = (r_new / np.maximum(norm, 1e-30)).astype(np.float32)
+        diff = np.abs(r_new - r).sum(axis=-1)
+        self.r = np.where(active[:, None], r_new, r)
+        return diff
+
+    def extract(self, slot):
+        return self.r[slot].copy()
+
+
+class _JacobiStepper(BatchStepper):
+    """Slot-batched Jacobi sweeps: z ← z + D⁻¹(b − Az) per row.
+
+    ``r0 = b − A·0`` is seeded from one zero-batch SpMV computed at
+    construction (per-column stability makes it the same column every
+    direct solve's first SpMM produces), so a slot loaded mid-stream
+    starts exactly where a fresh direct solve would.
+    """
+
+    solver = "jacobi"
+
+    def __init__(self, session, slots):
+        super().__init__(session, slots)
+        self.d = _diag_of(session)
+        if np.any(self.d == 0.0):
+            raise ValueError("jacobi needs a zero-free diagonal")
+        self.z = np.zeros((self.slots, self.n), np.float32)
+        self.r = np.zeros((self.slots, self.n), np.float32)
+        self.b = np.zeros((self.slots, self.n), np.float32)
+        self._zero_y = session.spmv(np.zeros((1, self.n), np.float32))[0]
+
+    def load(self, slot, *, b=None):
+        bv = np.ones(self.n, np.float32) if b is None else np.asarray(b, np.float32)
+        if bv.shape != (self.n,):
+            raise ValueError(f"b must be [N={self.n}], got {bv.shape}")
+        self.b[slot] = bv
+        self.z[slot] = 0.0
+        self.r[slot] = bv - self._zero_y
+
+    def step(self, active):
+        z_new = (self.z + self.r / self.d).astype(np.float32)
+        r_new = self.b - self.session.spmv(z_new)
+        rn = np.linalg.norm(r_new, axis=-1)
+        sel = active[:, None]
+        self.z = np.where(sel, z_new, self.z)
+        self.r = np.where(sel, r_new, self.r)
+        return rn
+
+    def extract(self, slot):
+        return self.z[slot].copy()
+
+
+class _SpmvStepper(BatchStepper):
+    """One-shot y = A @ x as a degenerate stepper, so raw PMVC requests
+    ride the same batched serving path as the iterative solvers."""
+
+    solver = "spmv"
+    fixed_iters = 1
+
+    def __init__(self, session, slots):
+        super().__init__(session, slots)
+        self.x = np.zeros((self.slots, self.n), np.float32)
+        self.y = np.zeros((self.slots, self.n), np.float32)
+
+    def load(self, slot, *, x):
+        xv = np.asarray(x, np.float32)
+        if xv.shape != (self.n,):
+            raise ValueError(f"x must be [N={self.n}], got {xv.shape}")
+        self.x[slot] = xv
+
+    def step(self, active):
+        y = self.session.spmv(self.x)
+        self.y = np.where(active[:, None], y, self.y)
+        return np.zeros(self.slots, np.float32)
+
+    def extract(self, slot):
+        return self.y[slot].copy()
+
+
+@register_stepper("pagerank")
+def pagerank_stepper(
+    session: "SparseSession", slots: int, *, damping: float = 0.85,
+    normalize: str = "auto",
+) -> BatchStepper:
+    return _PagerankStepper(session, slots, damping=damping, normalize=normalize)
+
+
+@register_stepper("jacobi")
+def jacobi_stepper(session: "SparseSession", slots: int) -> BatchStepper:
+    return _JacobiStepper(session, slots)
+
+
+@register_stepper("spmv")
+def spmv_stepper(session: "SparseSession", slots: int) -> BatchStepper:
+    return _SpmvStepper(session, slots)

@@ -138,9 +138,16 @@ def partition_lines(
     *,
     seed: int = 0,
     line_weights: np.ndarray | None = None,
+    fm_kw: Optional[Dict[str, int]] = None,
 ) -> np.ndarray:
     """Partition the rows (or cols) of ``a`` into ``k`` groups with the
-    requested method. Returns per-line assignment (length N or M)."""
+    requested method. Returns per-line assignment (length N or M).
+
+    ``fm_kw`` forwards refinement-budget overrides (``passes`` /
+    ``kicks`` / ``screen_slack``) to
+    :func:`repro.core.hypergraph.partition_hypergraph`; NEZGT has no
+    refinement loop, so the budget is ignored for ``method="nezgt"``.
+    """
     if spec.method == "nezgt":
         if line_weights is None:
             line_weights = a.row_counts() if spec.dim == "rows" else a.col_counts()
@@ -148,7 +155,7 @@ def partition_lines(
         return res.assignment
     elif spec.method == "hyper":
         graph = hg.hypergraph_from_coo(a, mode=spec.dim)
-        res = hg.partition_hypergraph(graph, k, seed=seed)
+        res = hg.partition_hypergraph(graph, k, seed=seed, **(fm_kw or {}))
         return res.assignment
     raise ValueError(f"unknown method {spec.method}")
 
@@ -178,6 +185,7 @@ def two_level_partition(
     *,
     seed: int = 0,
     timings: Optional[Dict[str, float]] = None,
+    fm_kw: Optional[Dict[str, int]] = None,
 ) -> TwoLevelPlan:
     """Run the paper's combined method: inter-node then intra-node.
 
@@ -185,6 +193,10 @@ def two_level_partition(
     three planning stages (``inter_s``, ``intra_s``, ``metrics_s``) —
     the per-phase decomposition ``benchmarks/bench_partition.py`` writes
     to ``BENCH_plan.json``.
+
+    ``fm_kw`` applies an FM refinement-budget override (``passes`` /
+    ``kicks`` / ``screen_slack``) to every hypergraph level of the
+    combo; NEZGT levels are unaffected.
     """
     if combo in PAPER_COMBOS:
         (im, idim), (jm, jdim) = PAPER_COMBOS[combo]
@@ -197,7 +209,7 @@ def two_level_partition(
 
     # --- Inter-node level ------------------------------------------------
     t0 = time.perf_counter()
-    node_of_line = partition_lines(a, f, inter, seed=seed)
+    node_of_line = partition_lines(a, f, inter, seed=seed, fm_kw=fm_kw)
     elem_line = a.row if inter.dim == "rows" else a.col
     elem_node = node_of_line[elem_line].astype(np.int32)
 
@@ -224,7 +236,7 @@ def two_level_partition(
             sub = COO((a.shape[0], n_local), sub_rows, local.astype(np.int32), sub_vals)
         if intra.method == "hyper":
             graph = hg.hypergraph_from_coo(sub, mode=intra.dim)
-            res = hg.partition_hypergraph(graph, cc, seed=seed + 1 + k)
+            res = hg.partition_hypergraph(graph, cc, seed=seed + 1 + k, **(fm_kw or {}))
             assignment = res.assignment
             hyper_cut += res.cut
         else:

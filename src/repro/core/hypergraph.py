@@ -18,7 +18,7 @@ and a balance constraint, plus an optional single coarsening level
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -213,6 +213,7 @@ def _fm_pass(
     order: np.ndarray,
     gains: np.ndarray,
     stale_nets: np.ndarray,
+    screen_slack: int = _SCREEN_SLACK,
 ) -> int:
     """One FM sweep over the maintained gain table.
 
@@ -242,7 +243,7 @@ def _fm_pass(
     """
     nv = hg.num_vertices
     best = gains.max(axis=1)
-    cand = np.nonzero(best > -_SCREEN_SLACK)[0]
+    cand = np.nonzero(best > -screen_slack)[0]
     if cand.size == 0:
         return 0
     rank = np.empty(nv, dtype=np.int64)
@@ -347,6 +348,7 @@ def partition_hypergraph(
     passes: int = 80,
     kicks: int = 8,
     seed: int = 0,
+    screen_slack: Optional[int] = None,
 ) -> HgResult:
     """Direct k-way partition minimizing the (λ−1) cut subject to
     ``load(part) ≤ (1+epsilon) · total/k``.
@@ -359,6 +361,15 @@ def partition_hypergraph(
     assignment seen (iterated local search — strictly no worse than the
     first local optimum, and in practice at or below the old sweeps'
     quality at a fraction of their cost).
+
+    ``passes`` / ``kicks`` / ``screen_slack`` are the per-call
+    refinement budget: a caller planning a throwaway or low-SLA
+    partition (the serving engine's on-demand graphs) can trade cut
+    quality for planning latency — e.g. ``passes=8, kicks=0`` stops
+    after the first local descent. ``screen_slack`` overrides the
+    stale-gain candidate screen (:data:`_SCREEN_SLACK`; ``None`` keeps
+    the default): larger values re-examine more near-zero-gain vertices
+    per pass, smaller ones make each pass cheaper.
     """
     if k <= 0:
         raise ValueError(k)
@@ -383,10 +394,12 @@ def partition_hypergraph(
     best_loads: np.ndarray | None = None
     best_cut = np.inf
     kicks_left = kicks
+    slack = _SCREEN_SLACK if screen_slack is None else int(screen_slack)
     for _ in range(passes):
         order = rng.permutation(hg.num_vertices)
         gain = _fm_pass(
-            hg, assignment, counts, loads, max_load, order, gains, stale_nets
+            hg, assignment, counts, loads, max_load, order, gains, stale_nets,
+            screen_slack=slack,
         )
         if gain != 0:
             _refresh_stale_rows(hg, assignment, counts, gains, stale_nets)

@@ -1,2 +1,23 @@
+"""Serving layer: wave-batched LM decoding (:mod:`repro.serve.engine`)
+and continuous-batched multi-tenant sparse solving
+(:mod:`repro.serve.sparse`)."""
 from repro.serve.engine import Request, ServeEngine, greedy_generate
-__all__ = ["Request", "ServeEngine", "greedy_generate"]
+from repro.serve.metrics import ServeMetrics, percentile
+from repro.serve.sparse import (
+    QueueFullError,
+    SparseServeEngine,
+    Status,
+    Ticket,
+)
+
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "greedy_generate",
+    "ServeMetrics",
+    "percentile",
+    "QueueFullError",
+    "SparseServeEngine",
+    "Status",
+    "Ticket",
+]

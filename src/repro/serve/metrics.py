@@ -1,0 +1,98 @@
+"""Serving metrics: counters + latency aggregation for the sparse engine.
+
+One :class:`ServeMetrics` instance rides inside a
+:class:`~repro.serve.sparse.SparseServeEngine`; the engine bumps the
+counters as tickets move through their lifecycle and appends one latency
+sample per finished request. ``snapshot()`` renders the whole thing as a
+plain dict — what the benchmark writes into ``BENCH_serve.json`` and
+what operators would scrape.
+
+Latency bookkeeping is split the way serving dashboards split it:
+
+* ``wait``   — submit → first iteration (queueing + admission delay),
+* ``run``    — first iteration → completion,
+* ``total``  — submit → completion (what the client feels).
+
+Quantiles use the nearest-rank method on the raw sample list — exact,
+no bucketing error, fine at the sample counts a benchmark or test
+produces (the engine stores one float per request, not a histogram).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+__all__ = ["ServeMetrics", "percentile"]
+
+
+def percentile(samples: List[float], q: float) -> float:
+    """Nearest-rank percentile (``q`` in [0, 100]) of ``samples``;
+    ``0.0`` for an empty list so snapshots of an idle engine are
+    well-formed."""
+    if not samples:
+        return 0.0
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    ordered = sorted(samples)
+    rank = max(1, int(-(-q * len(ordered) // 100)))  # ceil without math import
+    return float(ordered[min(rank, len(ordered)) - 1])
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Mutable counter block; the engine owns exactly one."""
+
+    # -- ticket lifecycle counts ------------------------------------------
+    submitted: int = 0
+    rejected: int = 0  # load-shed at submit (queue full)
+    expired: int = 0  # deadline passed (queued or mid-run)
+    failed: int = 0  # payload/config error surfaced per-ticket
+    completed: int = 0
+
+    # -- engine work ------------------------------------------------------
+    ticks: int = 0  # step() calls that did work
+    lane_steps: int = 0  # batched stepper iterations (one SpMM each)
+    slot_iters: int = 0  # Σ active slots over all lane steps
+    slot_ticks: int = 0  # Σ occupied slots over all ticks (occupancy num.)
+    slot_capacity: int = 0  # Σ configured slots over all ticks (denom.)
+
+    # -- latency samples (seconds, one per finished request) --------------
+    wait_s: List[float] = dataclasses.field(default_factory=list)
+    run_s: List[float] = dataclasses.field(default_factory=list)
+    total_s: List[float] = dataclasses.field(default_factory=list)
+
+    def record_latency(self, wait: float, run: float, total: float) -> None:
+        self.wait_s.append(float(wait))
+        self.run_s.append(float(run))
+        self.total_s.append(float(total))
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of stepper slots holding a live request, over
+        every tick any lane existed — the continuous-batching win is
+        this staying high while requests churn."""
+        if self.slot_capacity == 0:
+            return 0.0
+        return self.slot_ticks / self.slot_capacity
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flatten to the dict shape ``BENCH_serve.json`` stores."""
+        out: Dict[str, float] = {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "expired": self.expired,
+            "failed": self.failed,
+            "completed": self.completed,
+            "ticks": self.ticks,
+            "lane_steps": self.lane_steps,
+            "slot_iters": self.slot_iters,
+            "occupancy": round(self.occupancy, 4),
+        }
+        for name, samples in (
+            ("wait", self.wait_s),
+            ("run", self.run_s),
+            ("total", self.total_s),
+        ):
+            out[f"{name}_p50_s"] = percentile(samples, 50.0)
+            out[f"{name}_p99_s"] = percentile(samples, 99.0)
+        return out

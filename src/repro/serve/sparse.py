@@ -1,0 +1,396 @@
+"""Multi-tenant sparse-solve serving with continuous slot batching.
+
+The PR 5 plan store made planned sessions cheap to ship and re-open;
+this module puts them behind a request interface. Tenants submit solves
+(``pagerank(seeds=...)`` per user, ``jacobi`` right-hand sides, raw
+``spmv``) against *named registered graphs*; the engine packs requests
+that share a ``(graph, solver, config)`` key onto one slot-batched
+stepper (:class:`repro.api.BatchStepper`) so B tenants ride a single
+B-wide SpMM per iteration — the batching win the thesis measures for
+multiple right-hand sides, applied across users instead of within one.
+
+**Continuous batching.** Unlike the LM :class:`~repro.serve.engine.ServeEngine`
+(wave admission: new prompts enter only when the whole wave drains), a
+solve's iteration count varies per request — tol early-stops, different
+budgets — so slots free *individually*: each tick, every converged /
+exhausted / expired slot is retired and refilled from the queue before
+the lane steps again. The slot never goes cold while demand exists, and
+a long solve never blocks a short one behind a wave barrier.
+
+**Trust.** A slot's trajectory is bitwise equal to a direct
+batched-of-1 ``session.solve`` with the same payload (the stepper
+contract: per-row arithmetic + per-column-stable SpMM + ``np.where``
+freezing), so serving through the engine changes *scheduling*, never
+*results* — ``tests/test_serve_sparse.py`` pins this for every
+registered stepper.
+
+**Admission control.** The queue is bounded: ``submit`` past
+``max_queue`` waiting requests raises :class:`QueueFullError` (typed
+load shedding — the caller sheds or retries, the engine never builds an
+unbounded backlog). Each request may carry a ``timeout``; its deadline
+is enforced both while queued and between iterations, moving the ticket
+to ``EXPIRED`` cleanly (slot freed, engine keeps running). Bad payloads
+(wrong shape, zero seed mass, zero diagonal) fail only their own ticket
+(``FAILED`` + ``ticket.error``), never the engine.
+
+Sessions hydrate lazily through :func:`repro.api.plancache.hydrate_session`
+when a graph is registered by path, so the warm pool of materialized
+plans is bounded by :func:`repro.api.set_memo_limit` — a cold tenant's
+graph is evicted LRU and transparently re-hydrated from disk on its
+next request.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.api.plancache import hydrate_session
+from repro.api.session import SparseSession
+from repro.api.solvers import STEPPERS, BatchStepper, SolveResult
+from repro.serve.metrics import ServeMetrics
+
+__all__ = ["QueueFullError", "SparseServeEngine", "Status", "Ticket"]
+
+
+class QueueFullError(RuntimeError):
+    """Typed load-shed signal: the admission queue is at ``max_queue``.
+
+    Carries ``max_queue`` so callers can log/backoff without parsing the
+    message."""
+
+    def __init__(self, max_queue: int):
+        super().__init__(
+            f"serve queue full ({max_queue} waiting requests); shed or retry"
+        )
+        self.max_queue = max_queue
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    EXPIRED = "expired"  # deadline passed, queued or mid-run
+    FAILED = "failed"  # per-ticket error (bad payload / solver config)
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's handle; the engine mutates it through the lifecycle.
+
+    ``result`` is a :class:`SolveResult` once ``status is Status.DONE``
+    — field-for-field what the direct ``session.solve`` call would have
+    returned. ``error`` carries the failure text for ``FAILED``
+    tickets."""
+
+    tid: int
+    graph: str
+    solver: str
+    payload: Dict[str, np.ndarray]
+    config: Tuple[Tuple[str, object], ...]
+    iters: int
+    tol: float
+    deadline: Optional[float]
+    status: Status = Status.QUEUED
+    result: Optional[SolveResult] = None
+    error: Optional[str] = None
+    t_submit: float = 0.0
+    t_start: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def lane_key(self) -> Tuple[str, str, Tuple]:
+        return (self.graph, self.solver, self.config)
+
+
+class _Lane:
+    """One live stepper: fixed ``[slots, N]`` state for one
+    (graph, solver, config) key, with per-slot occupancy."""
+
+    def __init__(self, stepper: BatchStepper):
+        self.stepper = stepper
+        self.slots = stepper.slots
+        self.tickets: List[Optional[Ticket]] = [None] * self.slots
+        self.active = np.zeros(self.slots, dtype=bool)
+        self.iters_done = np.zeros(self.slots, dtype=np.int64)
+        self.budget = np.zeros(self.slots, dtype=np.int64)
+        self.residuals: List[List[float]] = [[] for _ in range(self.slots)]
+
+    @property
+    def occupied(self) -> int:
+        return int(self.active.sum())
+
+    def free_slot(self) -> Optional[int]:
+        idle = np.nonzero(~self.active)[0]
+        return int(idle[0]) if idle.shape[0] else None
+
+    def load(self, slot: int, ticket: Ticket) -> None:
+        self.stepper.load(slot, **ticket.payload)
+        self.tickets[slot] = ticket
+        self.active[slot] = True
+        self.iters_done[slot] = 0
+        fixed = self.stepper.fixed_iters
+        self.budget[slot] = ticket.iters if fixed is None else fixed
+        self.residuals[slot] = []
+
+    def retire(self, slot: int) -> None:
+        self.tickets[slot] = None
+        self.active[slot] = False
+
+
+class SparseServeEngine:
+    """Continuous-batching scheduler over registered sparse sessions.
+
+    ``batch_slots`` sizes every lane's stepper (the B of the shared
+    SpMM); ``max_queue`` bounds *waiting* admissions (running slots
+    don't count); ``default_iters`` / ``default_tol`` apply when a
+    request doesn't override them. ``executor`` overrides the executor
+    of hydrated/registered sessions; ``clock`` is injectable (tests
+    drive deadlines with a fake clock; production uses
+    ``time.monotonic``).
+
+    Single-threaded by design: ``submit`` enqueues, :meth:`step` runs
+    one scheduling tick (expire → refill → iterate each lane once), and
+    :meth:`run_until_drained` ticks until no work remains. A driver
+    thread or async loop owns the cadence; the engine itself never
+    blocks.
+    """
+
+    def __init__(
+        self,
+        *,
+        batch_slots: int = 8,
+        max_queue: int = 64,
+        default_iters: int = 50,
+        default_tol: float = 0.0,
+        executor: Optional[str] = None,
+        clock=time.monotonic,
+    ):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.batch_slots = int(batch_slots)
+        self.max_queue = int(max_queue)
+        self.default_iters = int(default_iters)
+        self.default_tol = float(default_tol)
+        self.executor = executor
+        self.clock = clock
+        self.metrics = ServeMetrics()
+        self._graphs: Dict[str, Union[str, SparseSession]] = {}
+        self._queue: "collections.deque[Ticket]" = collections.deque()
+        self._lanes: Dict[Tuple, _Lane] = {}
+        self._next_tid = 0
+
+    # -- registration ------------------------------------------------------
+
+    def register_graph(
+        self, name: str, source: Union[str, SparseSession]
+    ) -> None:
+        """Expose a graph to tenants. ``source`` is a live
+        :class:`SparseSession` or a path to a saved plan (``.npz`` from
+        :meth:`SparseSession.save`); paths hydrate lazily per request
+        through the plan-store memo, so registering ten thousand graphs
+        costs nothing until they're asked for."""
+        if not isinstance(source, (str, SparseSession)):
+            raise TypeError(
+                f"source must be a SparseSession or a plan path, got "
+                f"{type(source).__name__}"
+            )
+        self._graphs[name] = source
+
+    def graphs(self) -> List[str]:
+        return sorted(self._graphs)
+
+    def _session(self, name: str) -> SparseSession:
+        src = self._graphs[name]
+        if isinstance(src, str):
+            return hydrate_session(src, executor=self.executor)
+        if self.executor is not None and src.executor != self.executor:
+            return src.with_executor(self.executor)
+        return src
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        graph: str,
+        solver: str = "pagerank",
+        *,
+        payload: Optional[Dict[str, np.ndarray]] = None,
+        iters: Optional[int] = None,
+        tol: Optional[float] = None,
+        timeout: Optional[float] = None,
+        **config,
+    ) -> Ticket:
+        """Admit one request; returns its :class:`Ticket`.
+
+        Raises :class:`QueueFullError` when ``max_queue`` requests are
+        already waiting (typed load shedding), ``KeyError`` for an
+        unregistered graph or solver without a batch stepper —
+        admission-time errors raise, because the caller is still on the
+        line; errors only detectable at load time (payload shape, zero
+        diagonal) surface later as ``FAILED`` tickets.
+        """
+        if graph not in self._graphs:
+            known = ", ".join(sorted(self._graphs)) or "<none>"
+            raise KeyError(f"unknown graph {graph!r}; registered: {known}")
+        if solver not in STEPPERS:
+            raise KeyError(
+                f"solver {solver!r} has no batch stepper; steppable: "
+                f"{', '.join(sorted(STEPPERS.names()))}"
+            )
+        if iters is not None and iters < 1:
+            raise ValueError(f"iters must be >= 1, got {iters}")
+        if len(self._queue) >= self.max_queue:
+            self.metrics.rejected += 1
+            raise QueueFullError(self.max_queue)
+        now = self.clock()
+        ticket = Ticket(
+            tid=self._next_tid,
+            graph=graph,
+            solver=solver,
+            payload=dict(payload or {}),
+            config=tuple(sorted(config.items())),
+            iters=self.default_iters if iters is None else int(iters),
+            tol=self.default_tol if tol is None else float(tol),
+            deadline=None if timeout is None else now + float(timeout),
+            t_submit=now,
+        )
+        self._next_tid += 1
+        self._queue.append(ticket)
+        self.metrics.submitted += 1
+        return ticket
+
+    # -- scheduling --------------------------------------------------------
+
+    def pending(self) -> int:
+        """Waiting + running request count."""
+        running = sum(lane.occupied for lane in self._lanes.values())
+        return len(self._queue) + running
+
+    def _fail(self, ticket: Ticket, err: Exception, now: float) -> None:
+        ticket.status = Status.FAILED
+        ticket.error = f"{type(err).__name__}: {err}"
+        ticket.t_finish = now
+        self.metrics.failed += 1
+
+    def _expire(self, ticket: Ticket, now: float) -> None:
+        ticket.status = Status.EXPIRED
+        ticket.t_finish = now
+        self.metrics.expired += 1
+
+    def _finish(self, lane: _Lane, slot: int, now: float) -> None:
+        ticket = lane.tickets[slot]
+        hist = lane.residuals[slot]
+        ticket.result = SolveResult(
+            solver=ticket.solver,
+            x=lane.stepper.extract(slot),
+            value=hist[-1] if hist else 0.0,
+            residuals=list(hist),
+            iters_run=len(hist),
+            converged=bool(ticket.tol and hist and hist[-1] < ticket.tol),
+        )
+        ticket.status = Status.DONE
+        ticket.t_finish = now
+        self.metrics.completed += 1
+        self.metrics.record_latency(
+            wait=ticket.t_start - ticket.t_submit,
+            run=now - ticket.t_start,
+            total=now - ticket.t_submit,
+        )
+        lane.retire(slot)
+
+    def _refill(self, now: float) -> None:
+        """Move queued tickets into free slots, FIFO per lane — a ticket
+        whose lane is full is skipped without blocking tickets behind it
+        bound for other lanes (no head-of-line blocking across
+        tenants)."""
+        still_waiting: List[Ticket] = []
+        for ticket in self._queue:
+            if ticket.deadline is not None and now > ticket.deadline:
+                self._expire(ticket, now)
+                continue
+            key = ticket.lane_key
+            lane = self._lanes.get(key)
+            if lane is None:
+                try:
+                    session = self._session(ticket.graph)
+                    stepper = STEPPERS.get(ticket.solver)(
+                        session, self.batch_slots, **dict(ticket.config)
+                    )
+                except Exception as err:  # bad config (e.g. zero diagonal)
+                    self._fail(ticket, err, now)
+                    continue
+                lane = self._lanes[key] = _Lane(stepper)
+            slot = lane.free_slot()
+            if slot is None:
+                still_waiting.append(ticket)
+                continue
+            try:
+                lane.load(slot, ticket)
+            except Exception as err:  # bad payload; slot stays free
+                lane.retire(slot)
+                self._fail(ticket, err, now)
+                continue
+            ticket.status = Status.RUNNING
+            ticket.t_start = now
+        self._queue = collections.deque(still_waiting)
+
+    def step(self) -> bool:
+        """One scheduling tick: expire/refill from the queue, then
+        advance every occupied lane by exactly one solver iteration
+        (one batched SpMM per lane). Returns whether any work was done
+        — ``False`` means idle (empty queue, empty lanes), mirroring
+        the LM engine's no-op step."""
+        now = self.clock()
+        self._refill(now)
+        worked = bool(self._lanes)
+        for key in list(self._lanes):
+            lane = self._lanes[key]
+            if lane.occupied == 0:
+                # Idle lane with nothing queued for it: drop, releasing
+                # the session reference so memo eviction can reclaim it.
+                if not any(t.lane_key == key for t in self._queue):
+                    del self._lanes[key]
+                continue
+            active = lane.active.copy()
+            res = lane.stepper.step(active)
+            self.metrics.lane_steps += 1
+            self.metrics.slot_iters += int(active.sum())
+            after = self.clock()
+            for slot in np.nonzero(active)[0]:
+                ticket = lane.tickets[slot]
+                lane.residuals[slot].append(float(res[slot]))
+                lane.iters_done[slot] += 1
+                hit_tol = bool(ticket.tol and res[slot] < ticket.tol)
+                exhausted = lane.iters_done[slot] >= lane.budget[slot]
+                if hit_tol or exhausted:
+                    self._finish(lane, slot, after)
+                elif ticket.deadline is not None and after > ticket.deadline:
+                    lane.retire(slot)
+                    self._expire(ticket, after)
+            self.metrics.slot_ticks += int(active.sum())
+            self.metrics.slot_capacity += lane.slots
+        if worked or self._queue:
+            self.metrics.ticks += 1
+        return worked
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        """Tick until every admitted request reached a terminal status.
+
+        Raises ``RuntimeError`` if ``max_ticks`` elapse first — the
+        guard that turns a scheduling bug into a loud failure instead
+        of a hang (same contract as the LM engine)."""
+        for _ in range(max_ticks):
+            if self.pending() == 0:
+                return
+            self.step()
+        raise RuntimeError(
+            f"serve engine did not drain within {max_ticks} ticks "
+            f"({self.pending()} requests outstanding)"
+        )

@@ -82,3 +82,48 @@ def test_generic_mehrez_combos():
     for combo in ("NL-NL", "HC-HC", "HL-NL"):
         plan = two_level_partition(a, f=3, c=3, combo=combo)
         assert int(plan.core_stats.nnz.sum()) == a.nnz
+
+
+def test_fm_budget_explicit_defaults_bit_identical():
+    """Passing the library-default FM budget explicitly must not change
+    a single element owner — the knobs are overrides, not a second code
+    path (golden pins stay valid at defaults)."""
+    a = random_coo(120, 1200, seed=13)
+    base = two_level_partition(a, f=3, c=3, combo="NL-HL", seed=0)
+    expl = two_level_partition(
+        a, f=3, c=3, combo="NL-HL", seed=0,
+        fm_kw={"passes": 80, "kicks": 8},
+    )
+    np.testing.assert_array_equal(base.elem_node, expl.elem_node)
+    np.testing.assert_array_equal(base.elem_core, expl.elem_core)
+    assert base.hyper_cut == expl.hyper_cut
+
+
+def test_fm_budget_light_still_valid():
+    """A throwaway budget (few passes, no kicks, tight screen) still
+    yields a complete, balanced-ish assignment on every hyper level."""
+    a = random_coo(120, 1200, seed=14)
+    plan = two_level_partition(
+        a, f=3, c=3, combo="HL-HC", seed=0,
+        fm_kw={"passes": 4, "kicks": 0, "screen_slack": 0},
+    )
+    assert int(plan.core_stats.nnz.sum()) == a.nnz
+    assert plan.elem_node.min() >= 0 and plan.elem_node.max() < 3
+    assert plan.elem_core.min() >= 0 and plan.elem_core.max() < 3
+
+
+def test_fm_budget_through_distribute_kwargs():
+    """The partitioner kwargs surface on the public distribute() façade
+    and land in different plans when the budget meaningfully shrinks."""
+    from repro.api import Topology, distribute
+    from repro.sparse import csr_from_coo
+
+    a = random_coo(160, 2000, seed=15)
+    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    y_ref = csr_from_coo(a).matvec(x)
+    sess = distribute(
+        a, topology=Topology(2, 2), combo="NL-HC",
+        fm_passes=4, fm_kicks=0, fm_screen_slack=0,
+    )
+    y = sess.spmv(x)
+    assert float(np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-30)) < 1e-5

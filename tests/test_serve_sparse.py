@@ -1,0 +1,414 @@
+"""Serving tier for :mod:`repro.serve.sparse`.
+
+The load-bearing property: serving through the engine changes
+*scheduling*, never *results*. Every registered batch stepper is pinned
+bitwise against direct batched-of-1 ``SparseSession.solve`` calls
+(batched-of-1 because the simulate executor's SpMM is per-column
+bitwise stable across batch widths, while the 1-D path rounds
+differently) — under mixed lanes, continuous slot refill, tol
+early-stops, overload, and deadline churn. Plus the admission-control
+contract: typed rejection past the queue bound, clean deadline expiry,
+per-ticket failure isolation, and a drain guarantee.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import STEPPERS, Topology, distribute, plancache, set_memo_limit
+from repro.serve import QueueFullError, SparseServeEngine, Status, percentile
+from repro.sparse.formats import COO
+
+N = 96
+TOPO = Topology(2, 2)
+
+
+class FakeClock:
+    """Deterministic injectable clock for deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+def _diag_heavy_coo(seed, n=N, nnz=700):
+    """Random square COO with a dominant full diagonal (Jacobi-safe)."""
+    rng = np.random.default_rng(seed)
+    row = rng.integers(0, n, nnz).astype(np.int32)
+    col = rng.integers(0, n, nnz).astype(np.int32)
+    val = rng.standard_normal(nnz).astype(np.float32)
+    d = np.arange(n, dtype=np.int32)
+    row = np.concatenate([row, d])
+    col = np.concatenate([col, d])
+    val = np.concatenate([val, np.full(n, 8.0, np.float32)])
+    order = np.argsort(row, kind="stable")
+    return COO((n, n), row[order], col[order], val[order])
+
+
+@pytest.fixture(scope="module")
+def sessions():
+    return {
+        "g1": distribute(_diag_heavy_coo(1), topology=TOPO, block=16),
+        "g2": distribute(_diag_heavy_coo(2), topology=TOPO, block=16),
+    }
+
+
+@pytest.fixture()
+def engine(sessions):
+    eng = SparseServeEngine(batch_slots=4, max_queue=64, default_iters=8)
+    for name, sess in sessions.items():
+        eng.register_graph(name, sess)
+    return eng
+
+
+def _direct(sess, solver, payload, *, iters, tol=0.0):
+    """The parity reference: a direct batched-of-1 solve / spmv."""
+    if solver == "spmv":
+        return sess.spmv(payload["x"][None])[0]
+    kw = {k: v[None] for k, v in payload.items()}
+    return sess.solve(solver, iters=iters, tol=tol, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parity: engine-served == direct, for every registered stepper
+
+
+def test_every_registered_stepper_has_parity(engine, sessions):
+    """Every solver in STEPPERS round-trips through the engine bitwise
+    equal to the direct call — the registry is the contract, so a new
+    stepper entry is automatically held to it."""
+    rng = np.random.default_rng(3)
+    payload_of = {
+        "pagerank": lambda: {"seeds": rng.random(N).astype(np.float32)},
+        "jacobi": lambda: {"b": rng.random(N).astype(np.float32)},
+        "spmv": lambda: {"x": rng.random(N).astype(np.float32)},
+    }
+    assert set(payload_of) == set(STEPPERS.names()), (
+        "new stepper registered without a parity payload here"
+    )
+    submitted = []
+    for solver in sorted(STEPPERS.names()):
+        for _ in range(3):
+            payload = payload_of[solver]()
+            t = engine.submit("g1", solver, payload=payload, iters=6)
+            submitted.append((t, solver, payload))
+    engine.run_until_drained()
+    for t, solver, payload in submitted:
+        assert t.status is Status.DONE
+        if solver == "spmv":
+            ref = _direct(sessions["g1"], solver, payload, iters=6)
+            assert np.array_equal(t.result.x, ref)
+            assert t.result.iters_run == 1
+        else:
+            ref = _direct(sessions["g1"], solver, payload, iters=6)
+            assert np.array_equal(t.result.x, ref.x[0]), solver
+            assert t.result.residuals == ref.residuals, solver
+            assert t.result.iters_run == ref.iters_run
+            assert t.result.value == ref.value
+            assert t.result.converged == ref.converged
+
+
+def test_continuous_refill_keeps_parity(engine, sessions):
+    """More requests than slots, unequal budgets, two graphs and three
+    solvers interleaved: slots retire and refill mid-flight, each
+    ticket still bitwise matches its direct solve."""
+    rng = np.random.default_rng(4)
+    cases = []
+    for i in range(9):
+        seeds = rng.random(N).astype(np.float32)
+        t = engine.submit("g1", "pagerank", payload={"seeds": seeds}, iters=3 + i)
+        cases.append((t, "g1", "pagerank", {"seeds": seeds}, 3 + i))
+    for i in range(5):
+        b = rng.random(N).astype(np.float32)
+        t = engine.submit("g2", "jacobi", payload={"b": b}, iters=7)
+        cases.append((t, "g2", "jacobi", {"b": b}, 7))
+    for i in range(3):
+        x = rng.random(N).astype(np.float32)
+        t = engine.submit("g2", "spmv", payload={"x": x})
+        cases.append((t, "g2", "spmv", {"x": x}, 1))
+    engine.run_until_drained()
+    for t, g, solver, payload, iters in cases:
+        assert t.status is Status.DONE
+        ref = _direct(engine._session(g), solver, payload, iters=iters)
+        ref_x = ref if solver == "spmv" else ref.x[0]
+        assert np.array_equal(t.result.x, ref_x), (solver, t.tid)
+    # Continuous batching actually shared work: 17 requests, but far
+    # fewer batched lane steps than sequential iterations.
+    m = engine.metrics
+    assert m.completed == 17
+    assert m.lane_steps < m.slot_iters
+
+
+def test_tol_early_stop_frozen_slot_parity(engine, sessions):
+    """A converged slot freezes bitwise while its lane keeps stepping
+    neighbours — iters_run/converged match the direct tol solve."""
+    rng = np.random.default_rng(5)
+    fast = {"seeds": rng.random(N).astype(np.float32)}
+    slow = {"seeds": rng.random(N).astype(np.float32)}
+    t_fast = engine.submit("g1", "pagerank", payload=fast, iters=40, tol=1e-3)
+    t_slow = engine.submit("g1", "pagerank", payload=slow, iters=40, tol=1e-7)
+    engine.run_until_drained()
+    for t, payload, tol in ((t_fast, fast, 1e-3), (t_slow, slow, 1e-7)):
+        ref = _direct(sessions["g1"], "pagerank", payload, iters=40, tol=tol)
+        assert np.array_equal(t.result.x, ref.x[0])
+        assert t.result.iters_run == ref.iters_run
+        assert t.result.converged == ref.converged
+    assert t_fast.result.iters_run < t_slow.result.iters_run
+
+
+def test_per_lane_config_isolation(engine, sessions):
+    """Different solver configs (damping) land in different lanes and
+    keep their own arithmetic."""
+    rng = np.random.default_rng(6)
+    seeds = rng.random(N).astype(np.float32)
+    t_a = engine.submit("g1", "pagerank", payload={"seeds": seeds}, iters=6, damping=0.85)
+    t_b = engine.submit("g1", "pagerank", payload={"seeds": seeds}, iters=6, damping=0.5)
+    engine.run_until_drained()
+    for t, damping in ((t_a, 0.85), (t_b, 0.5)):
+        ref = sessions["g1"].solve(
+            "pagerank", seeds=seeds[None], iters=6, damping=damping
+        )
+        assert np.array_equal(t.result.x, ref.x[0])
+    assert not np.array_equal(t_a.result.x, t_b.result.x)
+
+
+def test_solve_batch_matches_direct(sessions):
+    """The session-level batch API (no engine): solve_batch == direct
+    batched-of-1, including per-request tol freeze."""
+    sess = sessions["g1"]
+    rng = np.random.default_rng(8)
+    seeds = [rng.random(N).astype(np.float32) for _ in range(4)]
+    batch = sess.solve_batch(
+        "pagerank", [{"seeds": s} for s in seeds], iters=30, tol=1e-4
+    )
+    for got, s in zip(batch, seeds):
+        ref = sess.solve("pagerank", seeds=s[None], iters=30, tol=1e-4)
+        assert np.array_equal(got.x, ref.x[0])
+        assert got.residuals == ref.residuals
+        assert got.iters_run == ref.iters_run
+        assert got.converged == ref.converged
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+
+
+def test_queue_full_typed_rejection(sessions):
+    eng = SparseServeEngine(batch_slots=2, max_queue=3, default_iters=4)
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(9)
+    accepted = [
+        eng.submit("g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)})
+        for _ in range(3)
+    ]
+    with pytest.raises(QueueFullError) as exc:
+        eng.submit(
+            "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)}
+        )
+    assert exc.value.max_queue == 3
+    assert eng.metrics.rejected == 1
+    # Shedding didn't poison the accepted work: drain + parity.
+    eng.run_until_drained()
+    assert all(t.status is Status.DONE for t in accepted)
+    assert eng.metrics.completed == 3
+
+
+def test_overload_drains_and_accepted_keep_parity(sessions):
+    """Sustained overload: submit bursts between ticks, shedding the
+    excess; the engine never deadlocks and every accepted ticket still
+    matches its direct solve bitwise."""
+    eng = SparseServeEngine(batch_slots=2, max_queue=4, default_iters=5)
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(10)
+    accepted, shed = [], 0
+    for _ in range(6):  # bursts of 4 against a queue of 4
+        for _ in range(4):
+            seeds = rng.random(N).astype(np.float32)
+            try:
+                accepted.append((eng.submit("g1", "pagerank", payload={"seeds": seeds}), seeds))
+            except QueueFullError:
+                shed += 1
+        eng.step()
+    eng.run_until_drained()
+    assert shed > 0 and eng.metrics.rejected == shed
+    assert eng.pending() == 0
+    for t, seeds in accepted:
+        assert t.status is Status.DONE
+        ref = sessions["g1"].solve("pagerank", seeds=seeds[None], iters=5)
+        assert np.array_equal(t.result.x, ref.x[0])
+
+
+def test_deadline_expiry_queued_and_running(sessions):
+    clk = FakeClock()
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=8, default_iters=1000, clock=clk
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(11)
+    t_run = eng.submit(
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+        timeout=5.0,
+    )
+    t_queued = eng.submit(
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+        timeout=1.0,
+    )
+    eng.step()  # t_run occupies the only slot; t_queued waits
+    assert t_run.status is Status.RUNNING
+    clk.advance(2.0)
+    eng.step()  # queued deadline passed -> expired without ever running
+    assert t_queued.status is Status.EXPIRED
+    assert t_queued.t_start is None
+    clk.advance(4.0)
+    eng.step()  # running deadline passed -> expired mid-run, slot freed
+    assert t_run.status is Status.EXPIRED
+    eng.run_until_drained()
+    assert eng.pending() == 0
+    assert eng.metrics.expired == 2
+    # The freed slot is reusable: a fresh request completes normally.
+    t_new = eng.submit(
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+        iters=3,
+    )
+    eng.run_until_drained()
+    assert t_new.status is Status.DONE
+
+
+def test_failed_tickets_do_not_poison_the_lane(engine, sessions):
+    rng = np.random.default_rng(12)
+    bad_shape = engine.submit(
+        "g1", "pagerank", payload={"seeds": np.ones(7, np.float32)}
+    )
+    zero_mass = engine.submit(
+        "g1", "pagerank", payload={"seeds": np.zeros(N, np.float32)}
+    )
+    seeds = rng.random(N).astype(np.float32)
+    good = engine.submit("g1", "pagerank", payload={"seeds": seeds}, iters=5)
+    engine.run_until_drained()
+    assert bad_shape.status is Status.FAILED and "seeds" in bad_shape.error
+    assert zero_mass.status is Status.FAILED and "mass" in zero_mass.error
+    assert good.status is Status.DONE
+    ref = sessions["g1"].solve("pagerank", seeds=seeds[None], iters=5)
+    assert np.array_equal(good.result.x, ref.x[0])
+    assert engine.metrics.failed == 2
+
+
+def test_admission_time_errors_raise(engine):
+    rng = np.random.default_rng(13)
+    with pytest.raises(KeyError, match="unknown graph"):
+        engine.submit("nope", "pagerank", payload={"seeds": rng.random(N)})
+    with pytest.raises(KeyError, match="no batch stepper"):
+        engine.submit("g1", "power_iteration")
+    with pytest.raises(ValueError, match="iters"):
+        engine.submit("g1", "pagerank", payload={"seeds": rng.random(N)}, iters=0)
+
+
+def test_run_until_drained_guard(engine):
+    rng = np.random.default_rng(14)
+    engine.submit(
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+        iters=50,
+    )
+    with pytest.raises(RuntimeError, match="did not drain"):
+        engine.run_until_drained(max_ticks=3)
+    engine.run_until_drained()  # and it can still finish afterwards
+    assert engine.pending() == 0
+
+
+def test_idle_step_is_noop(engine):
+    assert engine.step() is False
+    assert engine.metrics.ticks == 0
+
+
+# ---------------------------------------------------------------------------
+# Plan-store hydration + warm pool
+
+
+def test_path_registration_hydrates_lazily(tmp_path, sessions):
+    sess = sessions["g1"]
+    path = os.path.join(tmp_path, "g1.npz")
+    sess.save(path)
+    plancache.clear_memo()
+    eng = SparseServeEngine(batch_slots=2, max_queue=8, default_iters=4)
+    eng.register_graph("cold", str(path))
+    assert len(plancache._MEMO) == 0  # registration alone hydrates nothing
+    rng = np.random.default_rng(15)
+    seeds = rng.random(N).astype(np.float32)
+    t = eng.submit("cold", "pagerank", payload={"seeds": seeds})
+    eng.run_until_drained()
+    assert t.status is Status.DONE
+    assert "file:" + os.path.abspath(path) in plancache._MEMO
+    ref = sess.solve("pagerank", seeds=seeds[None], iters=4)
+    assert np.array_equal(t.result.x, ref.x[0])
+
+
+def test_memo_eviction_then_rehydration(tmp_path, sessions):
+    """A graph evicted from the warm pool (set_memo_limit) re-hydrates
+    transparently on its next request, with identical results."""
+    path = os.path.join(tmp_path, "g2.npz")
+    sessions["g2"].save(path)
+    plancache.clear_memo()
+    limits = set_memo_limit()  # read current
+    try:
+        eng = SparseServeEngine(batch_slots=2, max_queue=8, default_iters=4)
+        eng.register_graph("g", str(path))
+        rng = np.random.default_rng(16)
+        seeds = rng.random(N).astype(np.float32)
+        t1 = eng.submit("g", "pagerank", payload={"seeds": seeds})
+        eng.run_until_drained()
+        set_memo_limit(max_sessions=0)  # evict everything (cold pool)
+        assert len(plancache._MEMO) == 0
+        set_memo_limit(max_sessions=4)
+        t2 = eng.submit("g", "pagerank", payload={"seeds": seeds})
+        eng.run_until_drained()
+        assert t1.status is Status.DONE and t2.status is Status.DONE
+        assert np.array_equal(t1.result.x, t2.result.x)
+    finally:
+        set_memo_limit(**limits)
+
+
+def test_hydrate_session_shares_canonical_session(tmp_path, sessions):
+    path = os.path.join(tmp_path, "g1.npz")
+    sessions["g1"].save(path)
+    plancache.clear_memo()
+    h1 = plancache.hydrate_session(str(path))
+    h2 = plancache.hydrate_session(str(path))
+    assert h1 is h2
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+
+
+def test_metrics_snapshot_consistency(engine):
+    rng = np.random.default_rng(17)
+    for _ in range(5):
+        engine.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)}, iters=4,
+        )
+    engine.run_until_drained()
+    snap = engine.metrics.snapshot()
+    assert snap["submitted"] == 5
+    assert snap["completed"] == 5
+    assert snap["rejected"] == snap["expired"] == snap["failed"] == 0
+    assert snap["slot_iters"] == 5 * 4
+    assert 0.0 < snap["occupancy"] <= 1.0
+    assert snap["total_p50_s"] >= snap["wait_p50_s"] >= 0.0
+    assert snap["total_p99_s"] >= snap["total_p50_s"]
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 99) == 0.0
+    assert percentile([5.0], 50) == 5.0
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 50) == 50.0
+    assert percentile(xs, 99) == 99.0
+    assert percentile(xs, 100) == 100.0
+    with pytest.raises(ValueError):
+        percentile(xs, 101)
