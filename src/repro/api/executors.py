@@ -116,12 +116,12 @@ def shard_map_executor(session: "SparseSession") -> SpmvFn:
         local_tiles = hoist_tiles(op.local_tiles, tt)
         local_row = jnp.asarray(op.local_row)
         local_slot = jnp.asarray(op.local_slot)
-        halo_tiles = hoist_tiles(op.halo_tiles, tt)
+        halo_tiles = hoist_tiles(op.halo_tiles, tt)  # [U, K, TH, bm, bn]
         halo_row = jnp.asarray(op.halo_row)
         halo_slot = jnp.asarray(op.halo_slot)
-        send_idx = jnp.asarray(op.selective.send_idx)
-        recv_src = jnp.asarray(op.selective.recv_src)
-        recv_lane = jnp.asarray(op.selective.recv_lane)
+        wave_send_idx = jnp.asarray(op.wave_send_idx)
+        wave_recv_src = jnp.asarray(op.wave_recv_src)
+        wave_recv_lane = jnp.asarray(op.wave_recv_lane)
 
         def spmv_overlap(x: np.ndarray) -> np.ndarray:
             xb = pad_x_blocks(np.asarray(x, np.float32), dp.num_col_blocks, dp.bn)
@@ -134,9 +134,9 @@ def shard_map_executor(session: "SparseSession") -> SpmvFn:
                 halo_row,
                 halo_slot,
                 x_owned,
-                send_idx,
-                recv_src,
-                recv_lane,
+                wave_send_idx,
+                wave_recv_src,
+                wave_recv_lane,
             )
             return unblock_y(y, n)
 

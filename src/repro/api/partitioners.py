@@ -137,10 +137,13 @@ def _combo_partitioner(combo: str) -> Callable:
         fm_passes: Optional[int] = None,
         fm_kicks: Optional[int] = None,
         fm_screen_slack: Optional[int] = None,
+        locality_weight: float = 0.0,
+        locality_bn: Optional[int] = None,
     ) -> PartitionResult:
         plan = two_level_partition(
             a, topology.nodes, topology.cores, combo, seed=seed, timings=timings,
             fm_kw=_fm_budget(fm_passes, fm_kicks, fm_screen_slack),
+            locality_weight=locality_weight, locality_bn=locality_bn,
         )
         elem_unit = topology.unit_of(plan.elem_node, plan.elem_core)
         return PartitionResult(
@@ -165,9 +168,27 @@ def _flat_partitioner(method: str) -> Callable:
         fm_passes: Optional[int] = None,
         fm_kicks: Optional[int] = None,
         fm_screen_slack: Optional[int] = None,
+        locality_weight: float = 0.0,
+        locality_bn: Optional[int] = None,
     ) -> PartitionResult:
         cut = None
         fm_kw = _fm_budget(fm_passes, fm_kicks, fm_screen_slack)
+        affinity = None
+        if locality_weight > 0.0:
+            if locality_bn is None:
+                raise ValueError("locality_weight > 0 requires locality_bn")
+            from repro.sparse.bell import x_block_owner
+
+            u_n = topology.units
+            ncb = -(-a.shape[1] // locality_bn)
+            home_unit = x_block_owner(ncb, u_n)[a.col // locality_bn]
+            lines_idx = (a.row if dim == "rows" else a.col).astype(np.int64)
+            n_lines = a.shape[0] if dim == "rows" else a.shape[1]
+            affinity = (
+                np.bincount(lines_idx * u_n + home_unit, minlength=n_lines * u_n)
+                .reshape(n_lines, u_n)
+                .astype(np.float64)
+            )
         if method == "hyper":
             # Go through the hypergraph module directly so the real
             # connectivity cut is kept (partition_lines discards it).
@@ -175,12 +196,14 @@ def _flat_partitioner(method: str) -> Callable:
 
             res = hg.partition_hypergraph(
                 hg.hypergraph_from_coo(a, mode=dim), topology.units, seed=seed,
+                affinity=affinity, locality_weight=locality_weight,
                 **(fm_kw or {}),
             )
             assignment, cut = res.assignment, int(res.cut)
         else:
             assignment = partition_lines(
-                a, topology.units, LevelSpec(method, dim), seed=seed, fm_kw=fm_kw
+                a, topology.units, LevelSpec(method, dim), seed=seed, fm_kw=fm_kw,
+                affinity=affinity, locality_weight=locality_weight,
             )
         lines = a.row if dim == "rows" else a.col
         elem_unit = assignment[lines].astype(np.int64)

@@ -173,7 +173,8 @@ def _session_nbytes(sess: "SparseSession") -> int:
     op = sp if isinstance(sp, OverlapPlan) else None
     if op is not None:
         for f in ("local_tiles", "local_row", "local_slot",
-                  "halo_tiles", "halo_row", "halo_slot"):
+                  "halo_tiles", "halo_row", "halo_slot",
+                  "wave_send_idx", "wave_recv_src", "wave_recv_lane"):
             total += getattr(op, f).nbytes
         sp = op.selective
     if sp is not None:
@@ -356,14 +357,20 @@ def _pack_v1(sess: "SparseSession"):
     if sp is None:
         meta["exchange_plan"] = None
     elif isinstance(sp, OverlapPlan):
+        if sp.waves != 1:
+            raise ValueError(
+                "plan format v1 predates multi-wave overlap plans; save "
+                f"waves={sp.waves} plans with the default v2 format"
+            )
         for field in _SELECTIVE_FIELDS + ("tile_col_local",):
             arrays[f"sp.{field}"] = getattr(sp.selective, field)
         for field, _ in _OVERLAP_RAGGED:
-            arrays[f"op.{field}"] = (
-                _apply_transform(sess, getattr(sp, field))
-                if field.endswith("tiles")
-                else getattr(sp, field)
-            )
+            arr = getattr(sp, field)
+            if field.startswith("halo"):
+                arr = arr[:, 0]  # squeeze the single wave — legacy layout
+            if field.endswith("tiles"):
+                arr = _apply_transform(sess, arr)
+            arrays[f"op.{field}"] = arr
         arrays["op.local_counts"] = sp.local_counts
         arrays["op.halo_counts"] = sp.halo_counts
         meta["exchange_plan"] = {"kind": "overlap", "selective": _selective_meta(sp.selective)}
@@ -402,18 +409,33 @@ def _pack_v2(sess: "SparseSession"):
     if op is None:
         meta["exchange_plan"] = {"kind": "selective", "selective": _selective_meta(sel)}
         return arrays, meta
-    for field, counts_field in _OVERLAP_RAGGED:
-        ragged = ragged_from_stacked(getattr(op, field), getattr(op, counts_field))
+    for field, _ in _OVERLAP_RAGGED:
+        arr = getattr(op, field)
+        if field.startswith("halo"):
+            # Wave-shaped [U, K, TH, ...]: ragged over the U*K rows with
+            # the per-(unit, wave) real counts — padding never hits disk.
+            u, k = arr.shape[0], arr.shape[1]
+            ragged = ragged_from_stacked(
+                arr.reshape((u * k,) + arr.shape[2:]),
+                op.halo_wave_counts.reshape(-1),
+            )
+        else:
+            ragged = ragged_from_stacked(arr, op.local_counts)
         if field.endswith("tiles"):
             ragged = _apply_transform(sess, ragged)
         arrays[f"op.{field}"] = ragged
     arrays["op.local_counts"] = op.local_counts
-    arrays["op.halo_counts"] = op.halo_counts
+    arrays["op.halo_wave_counts"] = op.halo_wave_counts
+    # Wave routing schedules are dense (−1 = unused lane) — stored as-is.
+    arrays["op.wave_send_idx"] = op.wave_send_idx
+    arrays["op.wave_recv_src"] = op.wave_recv_src
+    arrays["op.wave_recv_lane"] = op.wave_recv_lane
     meta["exchange_plan"] = {
         "kind": "overlap",
         "selective": _selective_meta(sel),
         "t_local": op.t_local,
         "t_halo": op.t_halo,
+        "waves": op.waves,
     }
     return arrays, meta
 
@@ -495,7 +517,16 @@ def _expected_members(meta: dict) -> Set[str]:
         members |= {f"sp.{f}" for f in fields}
         if ep["kind"] == "overlap":
             members |= {f"op.{f}" for f, _ in _OVERLAP_RAGGED}
-            members |= {"op.local_counts", "op.halo_counts"}
+            members |= {"op.local_counts"}
+            if version == 2 and ep.get("waves") is not None:
+                members |= {
+                    "op.halo_wave_counts",
+                    "op.wave_send_idx",
+                    "op.wave_recv_src",
+                    "op.wave_recv_lane",
+                }
+            else:  # pre-wave layout (v1, or v2 written before waves)
+                members |= {"op.halo_counts"}
     return members
 
 
@@ -723,16 +754,28 @@ def load_session(
         )
         if epm["kind"] != "overlap":
             return sel
+        if version == 1 or epm.get("waves") is None:
+            # Pre-wave archive (v1, or a v2 written before the wave
+            # layout): the local/halo split and the wave-0 routing are a
+            # pure function of (device plan, selective schedule), so the
+            # single-wave plan is rebuilt rather than translated — the
+            # stored op.* arrays only served the old reader.
+            from repro.pmvc.plan_device import build_overlap_plan
+
+            return build_overlap_plan(dp_thunk(), sel, waves=1)
         local_counts = np.asarray(read("op.local_counts"))
-        halo_counts = np.asarray(read("op.halo_counts"))
-        fields = {"local_counts": local_counts, "halo_counts": halo_counts}
-        for field, counts_field in _OVERLAP_RAGGED:
-            raw = read(f"op.{field}")
-            if version == 1:
-                fields[field] = raw
+        hwc = np.asarray(read("op.halo_wave_counts"))
+        u, k = hwc.shape
+        fields = {"local_counts": local_counts, "halo_wave_counts": hwc}
+        for field, _ in _OVERLAP_RAGGED:
+            raw = np.asarray(read(f"op.{field}"))
+            if field.startswith("halo"):
+                stacked = stack_ragged(raw, hwc.reshape(-1), epm["t_halo"])
+                fields[field] = stacked.reshape((u, k) + stacked.shape[1:])
             else:
-                t = epm["t_local"] if counts_field == "local_counts" else epm["t_halo"]
-                fields[field] = stack_ragged(np.asarray(raw), fields[counts_field], t)
+                fields[field] = stack_ragged(raw, local_counts, epm["t_local"])
+        for field in ("wave_send_idx", "wave_recv_src", "wave_recv_lane"):
+            fields[field] = read(f"op.{field}")
         return OverlapPlan(selective=sel, **fields)
 
     sess = SparseSession(

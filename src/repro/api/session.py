@@ -11,7 +11,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.api.exchange import EXCHANGES
+from repro.api.exchange import resolve_exchange
 from repro.api.executors import EXECUTORS, SpmvFn
 from repro.api.partitioners import PartitionResult, resolve_partitioner
 from repro.api.solvers import SOLVERS, STEPPERS, BatchStepper, SolveResult
@@ -403,7 +403,7 @@ class SparseSession:
             self._partition,
             self.device_plan,
             exchange=exchange,
-            selective=EXCHANGES.get(exchange)(self.device_plan),
+            selective=resolve_exchange(exchange)(self.device_plan),
             executor=self.executor,
             tile_transform=self.tile_transform,
         )
@@ -442,14 +442,28 @@ def distribute(
     registered with :func:`repro.api.register_partitioner`.
 
     ``exchange`` picks the x fan-out: ``"replicated"`` (all-gather),
-    ``"selective"`` (static all_to_all of the needed blocks) or
+    ``"selective"`` (static all_to_all of the needed blocks),
     ``"overlap"`` (selective + pipelined local/halo contraction — the
     exchange hides behind the tiles whose x the unit already owns;
-    DESIGN.md §9).
+    DESIGN.md §9) or ``"overlap:K"`` (the halo split into K prioritized
+    waves, wave k's contraction hiding wave k+1's transfer — DESIGN.md
+    §13).
+
+    ``locality_weight`` (a partitioner kwarg, forwarded) biases the
+    partition toward keeping tiles on the unit that owns their x
+    block-column, shrinking the halo the exchange must move. Under an
+    overlap exchange it defaults to ``"auto"``: the pipeline is planned
+    at each weight in ``LOCALITY_GRID`` and the candidate with the
+    smallest modeled ``t_iter_overlap`` wins (the α-β-peak model of
+    :func:`repro.pmvc.dist.phase_costs` picks the weight per (matrix,
+    topology)). Non-overlap exchanges default to ``0.0`` — the exact
+    pre-locality objectives, bit-identical plans.
 
     ``cache_dir`` enables the persistent plan cache (DESIGN.md §10–§11):
     plans are keyed on (matrix content hash, topology, combo, block,
-    exchange, seed, partitioner kwargs); a key seen before in this
+    exchange, seed, partitioner kwargs — including the literal
+    ``"auto"`` sentinel, so an auto-tuned plan caches without paying the
+    grid on hits); a key seen before in this
     process returns a re-wrapped session without re-planning, a key
     found on disk lazily loads ``plan-<key>.npz`` (tile payloads
     materialize when an executor first needs them), and a miss plans
@@ -460,9 +474,19 @@ def distribute(
     :func:`repro.api.plancache.gc`.
     """
     bm, bn = (block, block) if isinstance(block, int) else block
+    kw = dict(partitioner_kw)
+    lw = kw.pop("locality_weight", None)
+    if lw is None:
+        lw = "auto" if exchange.split(":", 1)[0] == "overlap" else 0.0
     if cache_dir is not None:
         from repro.api.plancache import cached_distribute
 
+        ckw = dict(kw)
+        if lw == "auto":
+            ckw["locality_weight"] = "auto"
+        elif float(lw) != 0.0:
+            ckw["locality_weight"] = float(lw)
+            ckw.setdefault("locality_bn", bn)
         return cached_distribute(
             a,
             topology=topology,
@@ -473,13 +497,21 @@ def distribute(
             seed=seed,
             cache_dir=cache_dir,
             cache_budget_bytes=cache_budget_bytes,
-            partitioner_kw=partitioner_kw or None,
+            partitioner_kw=ckw or None,
         )
     if cache_budget_bytes is not None:
         raise ValueError("cache_budget_bytes requires cache_dir")
-    part = resolve_partitioner(combo)(a, topology, seed=seed, **partitioner_kw)
-    dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
-    sp = EXCHANGES.get(exchange)(dp)
+    if lw == "auto":
+        part, dp, sp = _auto_locality_plan(
+            a, topology, combo, exchange, bm, bn, seed, kw
+        )
+    else:
+        if float(lw) != 0.0:
+            kw["locality_weight"] = float(lw)
+            kw.setdefault("locality_bn", bn)
+        part = resolve_partitioner(combo)(a, topology, seed=seed, **kw)
+        dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
+        sp = resolve_exchange(exchange)(dp)
     return SparseSession(
         a,
         topology,
@@ -489,3 +521,38 @@ def distribute(
         selective=sp,
         executor=executor,
     )
+
+
+# Candidate locality weights the overlap auto-tuner plans at — 0.0 (the
+# pure load/FD objectives) plus a mild and a strong affinity bias. The
+# modeled pipelined iteration time arbitrates, so a weight only wins
+# when the halo it removes outweighs any load balance it costs.
+LOCALITY_GRID = (0.0, 1.0, 4.0)
+
+
+def _auto_locality_plan(a, topology, combo, exchange, bm, bn, seed, base_kw):
+    """Plan the overlap pipeline at each ``LOCALITY_GRID`` weight and
+    keep the candidate whose modeled ``t_iter_overlap`` is smallest
+    (ties break toward the smaller weight — weight 0.0 preserves the
+    historical plans). Partitioners that predate the locality kwargs
+    (custom registrations) silently fall back to weight 0.0."""
+    make_exchange = resolve_exchange(exchange)
+    run = resolve_partitioner(combo)
+    best = None
+    for w in LOCALITY_GRID:
+        kw = dict(base_kw)
+        if w != 0.0:
+            kw["locality_weight"] = w
+            kw.setdefault("locality_bn", bn)
+        try:
+            part = run(a, topology, seed=seed, **kw)
+        except TypeError:
+            if w == 0.0:
+                raise
+            continue  # partitioner without locality support
+        dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
+        sp = make_exchange(dp)
+        t = phase_costs(dp, sp)["t_iter_overlap"]
+        if best is None or t < best[0]:
+            best = (t, part, dp, sp)
+    return best[1], best[2], best[3]

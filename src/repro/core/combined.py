@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.sparse.formats import COO
+from repro.sparse.bell import x_block_owner
 from repro.core import nezgt
 from repro.core import hypergraph as hg
 
@@ -139,6 +140,8 @@ def partition_lines(
     seed: int = 0,
     line_weights: np.ndarray | None = None,
     fm_kw: Optional[Dict[str, int]] = None,
+    affinity: np.ndarray | None = None,
+    locality_weight: float = 0.0,
 ) -> np.ndarray:
     """Partition the rows (or cols) of ``a`` into ``k`` groups with the
     requested method. Returns per-line assignment (length N or M).
@@ -147,15 +150,24 @@ def partition_lines(
     ``kicks`` / ``screen_slack``) to
     :func:`repro.core.hypergraph.partition_hypergraph`; NEZGT has no
     refinement loop, so the budget is ignored for ``method="nezgt"``.
+
+    ``affinity``/``locality_weight`` forward the locality objective
+    (per-(line, group) own-x-block scores) to either method; at weight 0
+    both are bit-identical to the locality-free heuristics.
     """
     if spec.method == "nezgt":
         if line_weights is None:
             line_weights = a.row_counts() if spec.dim == "rows" else a.col_counts()
-        res = nezgt.nezgt_partition(line_weights, k)
+        res = nezgt.nezgt_partition(
+            line_weights, k, affinity=affinity, locality_weight=locality_weight
+        )
         return res.assignment
     elif spec.method == "hyper":
         graph = hg.hypergraph_from_coo(a, mode=spec.dim)
-        res = hg.partition_hypergraph(graph, k, seed=seed, **(fm_kw or {}))
+        res = hg.partition_hypergraph(
+            graph, k, seed=seed, affinity=affinity,
+            locality_weight=locality_weight, **(fm_kw or {}),
+        )
         return res.assignment
     raise ValueError(f"unknown method {spec.method}")
 
@@ -186,6 +198,8 @@ def two_level_partition(
     seed: int = 0,
     timings: Optional[Dict[str, float]] = None,
     fm_kw: Optional[Dict[str, int]] = None,
+    locality_weight: float = 0.0,
+    locality_bn: Optional[int] = None,
 ) -> TwoLevelPlan:
     """Run the paper's combined method: inter-node then intra-node.
 
@@ -197,6 +211,16 @@ def two_level_partition(
     ``fm_kw`` applies an FM refinement-budget override (``passes`` /
     ``kicks`` / ``screen_slack``) to every hypergraph level of the
     combo; NEZGT levels are unaffected.
+
+    ``locality_weight > 0`` enables the locality objective at both
+    levels (DESIGN.md §13): each non-zero's *home unit* is the unit that
+    owns its x block under the runtime's contiguous block-col ownership
+    (:func:`repro.sparse.bell.x_block_owner` with ``bn=locality_bn``,
+    which must then be given). The inter level scores lines by how much
+    of their weight lands on each node's units; the intra level scores
+    the node's lines against the node's own cores — so both partitioners
+    are pulled toward placements whose tiles read x locally instead of
+    through the exchange.
     """
     if combo in PAPER_COMBOS:
         (im, idim), (jm, jdim) = PAPER_COMBOS[combo]
@@ -207,9 +231,31 @@ def two_level_partition(
         p, q = combo.split("-")
         inter, intra = LevelSpec(tok[p[0]], tok[p[1]]), LevelSpec(tok[q[0]], tok[q[1]])
 
+    use_loc = locality_weight > 0.0
+    home_node = home_core = None
+    if use_loc:
+        if locality_bn is None:
+            raise ValueError("locality_weight > 0 requires locality_bn")
+        ncb = -(-a.shape[1] // locality_bn)
+        home_unit = x_block_owner(ncb, f * c)[a.col // locality_bn]  # [nnz]
+        home_node = home_unit // c
+        home_core = home_unit % c
+
     # --- Inter-node level ------------------------------------------------
     t0 = time.perf_counter()
-    node_of_line = partition_lines(a, f, inter, seed=seed, fm_kw=fm_kw)
+    aff_inter = None
+    if use_loc:
+        lines_idx = (a.row if inter.dim == "rows" else a.col).astype(np.int64)
+        n_lines = a.shape[0] if inter.dim == "rows" else a.shape[1]
+        aff_inter = (
+            np.bincount(lines_idx * f + home_node, minlength=n_lines * f)
+            .reshape(n_lines, f)
+            .astype(np.float64)
+        )
+    node_of_line = partition_lines(
+        a, f, inter, seed=seed, fm_kw=fm_kw,
+        affinity=aff_inter, locality_weight=locality_weight,
+    )
     elem_line = a.row if inter.dim == "rows" else a.col
     elem_node = node_of_line[elem_line].astype(np.int32)
 
@@ -234,14 +280,30 @@ def two_level_partition(
             sub = COO((n_local, a.shape[1]), local.astype(np.int32), sub_cols, sub_vals)
         else:
             sub = COO((a.shape[0], n_local), sub_rows, local.astype(np.int32), sub_vals)
+        aff_sub = None
+        if use_loc:
+            # Only elements whose home unit sits on *this* node can become
+            # local by intra-level placement; score them by home core.
+            sh_node, sh_core = home_node[sel], home_core[sel]
+            ok = (sh_node == k) & (sh_core < cc)
+            aff_sub = (
+                np.bincount(local[ok] * cc + sh_core[ok], minlength=n_local * cc)
+                .reshape(n_local, cc)
+                .astype(np.float64)
+            )
         if intra.method == "hyper":
             graph = hg.hypergraph_from_coo(sub, mode=intra.dim)
-            res = hg.partition_hypergraph(graph, cc, seed=seed + 1 + k, **(fm_kw or {}))
+            res = hg.partition_hypergraph(
+                graph, cc, seed=seed + 1 + k, affinity=aff_sub,
+                locality_weight=locality_weight, **(fm_kw or {}),
+            )
             assignment = res.assignment
             hyper_cut += res.cut
         else:
             w = sub.row_counts() if intra.dim == "rows" else sub.col_counts()
-            assignment = nezgt.nezgt_partition(w, cc).assignment
+            assignment = nezgt.nezgt_partition(
+                w, cc, affinity=aff_sub, locality_weight=locality_weight
+            ).assignment
         elem_core[sel] = assignment[local]
 
     # --- Metrics ------------------------------------------------------------

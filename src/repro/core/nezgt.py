@@ -15,6 +15,13 @@ ch.4 §2 for the thesis' column variant). Three phases:
   choosing the move that minimizes ``|Diff/2 - nzx|`` (transfer) or
   ``|Diff/2 - (nzx - nzn)|`` (exchange). Iterate while FD decreases, up
   to ``max_iters``.
+* **Phase 3** (opt-in, ``affinity``/``locality_weight``) — load-preserving
+  locality: within each weight class the multiset of fragment capacities
+  is fixed (so loads — hence FD — stay bit-identical), but the
+  line→fragment matching inside the class is re-solved greedily to
+  maximize total own-block affinity. With ``locality_weight > 0`` the
+  phase-2 move scores also gain ``-w·Δaffinity`` so refinement prefers
+  FD moves that also improve locality.
 
 The heuristic is weight-agnostic: the same code balances scalar non-zeros
 (the paper's setting), non-empty MXU tiles (our TPU adaptation), or MoE
@@ -87,6 +94,8 @@ def _phase2(
     assignment: np.ndarray,
     f: int,
     max_iters: int,
+    affinity: np.ndarray | None = None,
+    locality_weight: float = 0.0,
 ) -> int:
     """In-place FD refinement. Returns iteration count.
 
@@ -105,7 +114,14 @@ def _phase2(
 
     This replaces the per-line Python loops (O(|fcmx|·|fcmn|) with a
     numpy call per line) by O((|fcmx| + |fcmn|) log |fcmn|) per step.
+
+    With ``affinity``/``locality_weight`` set, every candidate score gains
+    ``-locality_weight · Δaffinity`` (affinity gained by the move), so ties
+    and near-ties in the FD window resolve toward moves that also place
+    lines on the fragment owning their x blocks. The loop's termination
+    rule — stop when FD stops decreasing — is unchanged.
     """
+    use_loc = affinity is not None and locality_weight > 0.0
     loads = fragment_loads(weights, assignment, f)
     # Fragment membership as python lists; moves swap-pop by position
     # (order within a fragment is irrelevant to the heuristic).
@@ -126,8 +142,13 @@ def _phase2(
         wx = weights[mx]
 
         # Candidate 1: transfer a line from fcmx with 0 < nzx < Diff,
-        # minimizing |Diff/2 - nzx|.
-        t_scores = np.where((wx > 0) & (wx < diff), np.abs(half - wx), np.inf)
+        # minimizing |Diff/2 - nzx| (locality-adjusted when enabled).
+        t_base = np.abs(half - wx)
+        if use_loc:
+            t_base = t_base - locality_weight * (
+                affinity[mx, fcmn] - affinity[mx, fcmx]
+            )
+        t_scores = np.where((wx > 0) & (wx < diff), t_base, np.inf)
         ti = int(np.argmin(t_scores))
         best_transfer_pos = ti if np.isfinite(t_scores[ti]) else -1
         best_transfer_score = float(t_scores[ti])
@@ -138,7 +159,8 @@ def _phase2(
         best_exchange_score = np.inf
         mn = members[fcmn]
         if mn:
-            wn = weights[np.asarray(mn, dtype=np.int64)]
+            mn_idx = np.asarray(mn, dtype=np.int64)
+            wn = weights[mn_idx]
             sort_n = np.argsort(wn, kind="stable")
             sw = wn[sort_n]
             target = wx - half
@@ -148,9 +170,13 @@ def _phase2(
                 axis=1,
             )  # [|fcmx|, 2] — the two neighbours of the target
             delta = wx[:, None] - sw[cand]
-            e_scores = np.where(
-                (delta > 0) & (delta < diff), np.abs(half - delta), np.inf
-            )
+            e_base = np.abs(half - delta)
+            if use_loc:
+                # Affinity gained: lx moves fcmx→fcmn, partner ln the reverse.
+                gain_x = affinity[mx, fcmn] - affinity[mx, fcmx]
+                gain_n = (affinity[mn_idx, fcmx] - affinity[mn_idx, fcmn])[sort_n]
+                e_base = e_base - locality_weight * (gain_x[:, None] + gain_n[cand])
+            e_scores = np.where((delta > 0) & (delta < diff), e_base, np.inf)
             flat = int(np.argmin(e_scores))
             li, ci = divmod(flat, 2)
             if np.isfinite(e_scores[li, ci]):
@@ -193,6 +219,49 @@ def _phase2(
     return iters
 
 
+def _phase_locality(
+    weights: np.ndarray,
+    assignment: np.ndarray,
+    f: int,
+    affinity: np.ndarray,
+) -> None:
+    """In-place load-preserving locality pass.
+
+    Within a weight class (lines of equal weight) any permutation of the
+    line→fragment matching keeps every fragment load — and therefore the
+    FD criterion — bit-identical. So per class we keep the per-fragment
+    *capacities* fixed and re-solve the matching greedily for affinity:
+    (line, fragment) pairs sorted by affinity descending, each line takes
+    the best fragment with remaining capacity. The greedy result is only
+    adopted when it beats the incumbent matching, so the pass can never
+    lose affinity.
+    """
+    uw, inv = np.unique(weights, return_inverse=True)
+    for c in range(uw.shape[0]):
+        lines = np.nonzero(inv == c)[0]
+        m = lines.shape[0]
+        if m < 2:
+            continue
+        cap = np.bincount(assignment[lines], minlength=f)
+        sub = affinity[lines]  # [m, f]
+        cur_total = sub[np.arange(m), assignment[lines]].sum()
+        order = np.argsort(sub, axis=None, kind="stable")[::-1]
+        new_asg = np.full(m, -1, dtype=np.int64)
+        rem = cap.copy()
+        left = m
+        for flat in order.tolist():
+            li, fr = divmod(flat, f)
+            if new_asg[li] >= 0 or rem[fr] == 0:
+                continue
+            new_asg[li] = fr
+            rem[fr] -= 1
+            left -= 1
+            if left == 0:
+                break
+        if sub[np.arange(m), new_asg].sum() > cur_total:
+            assignment[lines] = new_asg
+
+
 def nezgt_partition(
     weights: np.ndarray,
     f: int,
@@ -200,6 +269,8 @@ def nezgt_partition(
     descending: bool = True,
     max_iters: int = 1000,
     refine: bool = True,
+    affinity: np.ndarray | None = None,
+    locality_weight: float = 0.0,
 ) -> NezgtResult:
     """Partition ``len(weights)`` lines into ``f`` fragments.
 
@@ -207,19 +278,42 @@ def nezgt_partition(
     NEZGT_ligne, per column for NEZGT_colonne, tiles per block-line for the
     TPU adaptation). ``refine=False`` stops after phase 1 (used by tests to
     check C1: refinement strictly helps).
+
+    ``affinity`` is an optional ``[n_lines, f]`` table of per-(line,
+    fragment) locality scores (weight of the line's non-zeros whose x
+    blocks the fragment owns). With ``locality_weight > 0`` it biases the
+    phase-2 move scores and enables the load-preserving phase-3 matching;
+    at the default 0 the function is bit-identical to the locality-free
+    heuristic.
     """
     weights = np.asarray(weights, dtype=np.int64)
     if f <= 0:
         raise ValueError(f"need f >= 1, got {f}")
     if f > weights.shape[0]:
         raise ValueError(f"f={f} exceeds number of lines {weights.shape[0]}")
+    use_loc = affinity is not None and locality_weight > 0.0
+    if use_loc:
+        affinity = np.asarray(affinity, dtype=np.float64)
+        if affinity.shape != (weights.shape[0], f):
+            raise ValueError(
+                f"affinity shape {affinity.shape} != {(weights.shape[0], f)}"
+            )
     assignment = _phase01(weights, f, descending)
     loads = fragment_loads(weights, assignment, f)
     fd1 = fd_criterion(loads)
     iters = 0
     if refine:
-        iters = _phase2(weights, assignment, f, max_iters)
+        iters = _phase2(
+            weights,
+            assignment,
+            f,
+            max_iters,
+            affinity if use_loc else None,
+            locality_weight,
+        )
         loads = fragment_loads(weights, assignment, f)
+    if use_loc:
+        _phase_locality(weights, assignment, f, affinity)
     return NezgtResult(
         assignment=assignment,
         loads=loads,

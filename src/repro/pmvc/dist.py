@@ -187,6 +187,23 @@ def _emulated_exchange(owned, send_idx, xb):
     return x_owned, jnp.swapaxes(send, 0, 1)
 
 
+def _emulated_wave_exchange(owned, wave_send_idx, xb):
+    """Wave variant of :func:`_emulated_exchange`: ``wave_send_idx`` is
+    ``[U(src), K, U(dst), L]`` (one all_to_all schedule per halo wave).
+    Returns ``(x_owned, recv)`` with ``recv`` ``[U(dst), K, U(src), L,
+    bn(, B)]`` — the same swap on the src/dst axes, wave axis carried
+    through."""
+    omask = (owned >= 0).reshape(owned.shape + (1,) * (xb.ndim - 1))
+    x_owned = jnp.where(omask, xb[jnp.maximum(owned, 0)], 0.0)
+    smask = (wave_send_idx >= 0).reshape(wave_send_idx.shape + (1,) * (xb.ndim - 1))
+    safe = jnp.maximum(wave_send_idx, 0)
+    units = jnp.arange(owned.shape[0])
+    send = jnp.where(
+        smask, x_owned[units[:, None, None, None], safe], 0.0
+    )  # [U(src), K, U(dst), L, bn(, B)]
+    return x_owned, jnp.swapaxes(send, 0, 2)
+
+
 def _send_all_to_all(x_local, send_idx):
     """shard_map-side counterpart of :func:`_emulated_exchange`: mask the
     unit's outgoing blocks (``send_idx`` ``[U, L]`` slots into the local
@@ -268,29 +285,34 @@ def _make_simulate_overlap_fn(
 ) -> Callable[[jax.Array], jax.Array]:
     """Overlapped vmap path: local tiles contract straight from the
     owned x shard (no dependency on the emulated all_to_all), halo tiles
-    from the delivered workspace — the same dependency structure the
-    shard_map step exposes to XLA's async collectives."""
+    — one wave at a time — from the delivered per-wave workspaces: the
+    same dependency structure the shard_map step exposes to XLA's async
+    collectives. The wave count K is static (baked into the plan array
+    shapes), so the Python loop over waves unrolls at trace time."""
     nrb = plan.num_row_blocks
     sp = op.selective
+    nw = op.waves
     local_tiles = hoist_tiles(op.local_tiles, transform)
     local_row = jnp.asarray(op.local_row)
     local_slot = jnp.asarray(op.local_slot)
-    halo_tiles = hoist_tiles(op.halo_tiles, transform)
+    halo_tiles = hoist_tiles(op.halo_tiles, transform)  # [U, K, TH, bm, bn]
     halo_row = jnp.asarray(op.halo_row)
     halo_slot = jnp.asarray(op.halo_slot)
     owned = jnp.asarray(sp.owned)  # [U, per]
-    send_idx = jnp.asarray(sp.send_idx)  # [U, U, L]
-    recv_src = jnp.asarray(sp.recv_src)
-    recv_lane = jnp.asarray(sp.recv_lane)
+    wave_send_idx = jnp.asarray(op.wave_send_idx)  # [U, K, U, L]
+    wave_recv_src = jnp.asarray(op.wave_recv_src)  # [U, K, W]
+    wave_recv_lane = jnp.asarray(op.wave_recv_lane)
 
     def run_overlap(xb: jax.Array) -> jax.Array:
-        x_owned, recv = _emulated_exchange(owned, send_idx, xb)
+        x_owned, recv = _emulated_wave_exchange(owned, wave_send_idx, xb)
 
         def one_unit(lt, lr, ls, ht, hr, hs, x_own_u, recv_u, src, lane):
             # Local partial first — depends only on x_own_u.
-            y_local = _unit_spmm(lt, lr, x_own_u[ls], nrb)
-            ws = recv_u[src, lane]  # [W, bn(, B)] compact workspace
-            return y_local + _unit_spmm(ht, hr, ws[hs], nrb)
+            y = _unit_spmm(lt, lr, x_own_u[ls], nrb)
+            for k in range(nw):
+                ws = recv_u[k][src[k], lane[k]]  # [W, bn(, B)] workspace
+                y = y + _unit_spmm(ht[k], hr[k], ws[hs[k]], nrb)
+            return y
 
         partials = jax.vmap(one_unit)(
             local_tiles,
@@ -301,8 +323,8 @@ def _make_simulate_overlap_fn(
             halo_slot,
             x_owned,
             recv,
-            recv_src,
-            recv_lane,
+            wave_recv_src,
+            wave_recv_lane,
         )
         return partials.sum(axis=0)
 
@@ -360,12 +382,14 @@ def make_pmvc_step(
     send_idx, recv_src, recv_lane)`` with x block-col-sharded.
     Overlap mode (``overlap=True``, or ``selective`` already an
     :class:`OverlapPlan`): ``step(local_tiles, local_row, local_slot,
-    halo_tiles, halo_row, halo_slot, x_owned, send_idx, recv_src,
-    recv_lane)`` — the step *issues the all_to_all first*, contracts the
-    local tiles (which only read the unit's own x shard), then the halo
-    tiles from the delivered workspace, so XLA's async collectives can
-    hide the transfer behind the local contraction (DESIGN.md §9). The
-    step closes over shapes only — the caller supplies the
+    halo_tiles, halo_row, halo_slot, x_owned, wave_send_idx,
+    wave_recv_src, wave_recv_lane)`` — the step *issues every wave's
+    all_to_all first* (the wave count K is static, read off the traced
+    array shapes), contracts the local tiles (which only read the unit's
+    own x shard), then accumulates each wave's halo tiles from its
+    delivered workspace, so XLA's async collectives can hide wave k+1's
+    transfer behind wave k's contraction (DESIGN.md §9/§13). The step
+    closes over shapes only — the caller supplies the
     :class:`OverlapPlan`'s arrays at call time (build one with
     :func:`repro.pmvc.plan_device.build_overlap_plan`). Passing
     ``overlap=False`` with an :class:`OverlapPlan` runs its embedded
@@ -393,22 +417,30 @@ def make_pmvc_step(
             halo_row,
             halo_slot,
             x_owned,
-            send_idx,
-            recv_src,
-            recv_lane,
+            wave_send_idx,
+            wave_recv_src,
+            wave_recv_lane,
         ):
             # x_owned: [1, per, bn(, B)] local shard; *_tiles/*_row/*_slot
-            # and the schedule arrays are [1, ...] local unit slices.
+            # and the schedule arrays are [1, ...] local unit slices; the
+            # wave axis (K, static) sits at position 1 after the slice.
             x_local = x_owned[0]
-            # Collective issued before any FLOP: nothing below depends on
-            # `recv` until the halo contraction, so the local partial can
-            # execute while the transfer is in flight.
-            recv = _send_all_to_all(x_local, send_idx[0])
-            y_local = _unit_spmm(
+            nw = halo_tiles.shape[1]
+            # Every wave's collective issued before any FLOP: nothing
+            # below depends on recvs[k] until wave k's halo contraction,
+            # so the local partial hides wave 0's transfer and each
+            # wave's contraction hides the next wave's transfer.
+            recvs = [
+                _send_all_to_all(x_local, wave_send_idx[0, k]) for k in range(nw)
+            ]
+            y = _unit_spmm(
                 local_tiles[0], local_row[0], x_local[local_slot[0]], nrb
             )
-            ws = recv[recv_src[0], recv_lane[0]]  # [W, bn(, B)] workspace
-            y = y_local + _unit_spmm(halo_tiles[0], halo_row[0], ws[halo_slot[0]], nrb)
+            for k in range(nw):
+                ws = recvs[k][wave_recv_src[0, k], wave_recv_lane[0, k]]
+                y = y + _unit_spmm(
+                    halo_tiles[0, k], halo_row[0, k], ws[halo_slot[0, k]], nrb
+                )
             return jax.lax.psum(y, "unit")
 
         return jax.jit(
@@ -476,26 +508,49 @@ def phase_costs(
     selective: ExchangePlan = None,
     bytes_per: int = 4,
     batch: int = 1,
+    *,
+    link_bytes_per_s: Optional[float] = None,
+    unit_flops_per_s: Optional[float] = None,
 ) -> Dict[str, float]:
     """Analytic per-phase volumes and model times for the benchmark
-    tables (paper ch.4; overlap model DESIGN.md §9).
+    tables (paper ch.4; overlap model DESIGN.md §9/§13).
 
     ``batch`` is the SpMM width B: payload volumes scale with B while
     the per-message overhead (``MESSAGE_OVERHEAD_BYTES`` × messages) is
     paid once per exchange — so the ``*_per_rhs`` keys shrink as B
     grows, the amortization the batch-first refactor buys.
 
-    Time terms (seconds under the ``MODEL_*`` α-β-peak constants; only
-    ratios are meaningful): ``t_scatter`` / ``t_gather`` are the wire
-    times, ``t_compute`` the padded per-unit contraction. When
-    ``selective`` is an :class:`OverlapPlan` the dict additionally
+    Time terms (seconds under the α-β-peak constants; only ratios are
+    meaningful): ``t_scatter`` / ``t_gather`` are the wire times,
+    ``t_compute`` the padded per-unit contraction.
+    ``link_bytes_per_s`` / ``unit_flops_per_s`` override the model's β
+    and peak terms — :mod:`repro.benchmarks.bench_pmvc` calibrates them
+    against measured rows so the model tracks the machine it runs on;
+    ``None`` keeps the pinned ``MODEL_*`` defaults the golden tests
+    assume.
+
+    When ``selective`` is an :class:`OverlapPlan` the dict additionally
     carries the pipelined model — ``t_local`` / ``t_halo`` (the two
-    contraction phases), ``t_iter_overlap = max(t_scatter, t_local) +
-    t_halo + t_gather`` vs ``t_iter_blocking = t_scatter + t_compute +
-    t_gather``, ``overlap_efficiency = min(t_scatter, t_local) /
-    t_scatter`` (fraction of the exchange hidden behind local work) and
-    the projected ``overlap_speedup``.
+    contraction phases) and ``t_iter_overlap`` vs ``t_iter_blocking =
+    t_scatter + t_compute + t_gather``. For a single halo wave
+    ``t_iter_overlap = max(t_scatter, t_local) + t_halo + t_gather``;
+    for K waves the K-stage pipeline recursion applies — wave k's
+    transfer (its own α-β time from ``wave_wire_blocks[k]`` /
+    ``wave_messages[k]``) lands behind the preceding contractions:
+
+    .. code-block:: text
+
+        comm_end[k] = comm_end[k-1] + t_wave_scatter[k]
+        comp_end[k] = max(comp_end[k-1], comm_end[k]) + t_wave_halo
+        t_iter_overlap = comp_end[K-1] + t_gather
+
+    ``overlap_efficiency`` is the fraction of the total exchange time
+    hidden behind contractions (``min(t_scatter, t_local) / t_scatter``
+    at K=1) and ``overlap_speedup`` the projected blocking/overlap
+    ratio.
     """
+    link = float(link_bytes_per_s) if link_bytes_per_s else MODEL_LINK_BYTES_PER_S
+    peak = float(unit_flops_per_s) if unit_flops_per_s else MODEL_UNIT_FLOPS_PER_S
     op = selective if isinstance(selective, OverlapPlan) else None
     sp = op.selective if op is not None else selective
     u = plan.num_units
@@ -511,10 +566,10 @@ def phase_costs(
     useful = 2.0 * float(plan.real_tiles.sum()) * plan.bm * plan.bn * b
     gather = u * plan.num_row_blocks * plan.bm * bytes_per * b  # psum volume
     gather_overhead = u * MESSAGE_OVERHEAD_BYTES
-    t_scatter = float(scatter + overhead) / MODEL_LINK_BYTES_PER_S
-    t_gather = float(gather + gather_overhead) / MODEL_LINK_BYTES_PER_S
+    t_scatter = float(scatter + overhead) / link
+    t_gather = float(gather + gather_overhead) / link
     # Units run the padded tile count in lockstep → per-unit time.
-    t_compute = 2.0 * plan.t * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
+    t_compute = 2.0 * plan.t * plan.bm * plan.bn * b / peak
     out = {
         "batch": float(b),
         "scatter_bytes": float(scatter),
@@ -540,18 +595,41 @@ def phase_costs(
     # the owned-and-referenced blocks read straight from the shard.
     diag = np.arange(op.num_units)
     local_blocks = int((op.selective.send_idx[diag, diag] >= 0).sum())
-    t_local = 2.0 * op.t_local * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
-    t_halo = 2.0 * op.t_halo * plan.bm * plan.bn * b / MODEL_UNIT_FLOPS_PER_S
-    hidden = min(t_scatter, t_local)
+    nw = op.waves
+    t_local = 2.0 * op.t_local * plan.bm * plan.bn * b / peak
+    t_halo = 2.0 * op.t_halo * plan.bm * plan.bn * b / peak
+    if nw == 1:
+        t_iter_overlap = max(t_scatter, t_local) + t_halo + t_gather
+        hidden = min(t_scatter, t_local)
+        efficiency = hidden / t_scatter if t_scatter > 0 else 1.0
+    else:
+        # K-stage pipeline: wave k's α-β transfer queues behind wave
+        # k-1's on the link; its contraction starts once both the wave
+        # landed and the previous contraction finished. Each wave pads
+        # to the common t_halo tile count (lockstep units).
+        wave_bytes = op.wave_wire_blocks * plan.bn * bytes_per * b
+        wave_overhead = op.wave_messages * MESSAGE_OVERHEAD_BYTES
+        t_wave_scatter = (wave_bytes + wave_overhead).astype(np.float64) / link
+        comm_end = np.cumsum(t_wave_scatter)
+        comp_end = t_local
+        for k in range(nw):
+            comp_end = max(comp_end, float(comm_end[k])) + t_halo
+        t_iter_overlap = comp_end + t_gather
+        total_comm = float(t_wave_scatter.sum())
+        exposed = comp_end - (t_local + nw * t_halo)
+        efficiency = (
+            (total_comm - exposed) / total_comm if total_comm > 0 else 1.0
+        )
     out.update(
         {
             "halo_bytes": float(scatter),
             "local_x_bytes": float(local_blocks * plan.bn * bytes_per * b),
             "local_tile_fraction": op.local_fraction,
+            "waves": float(nw),
             "t_local": t_local,
             "t_halo": t_halo,
-            "t_iter_overlap": max(t_scatter, t_local) + t_halo + t_gather,
-            "overlap_efficiency": hidden / t_scatter if t_scatter > 0 else 1.0,
+            "t_iter_overlap": t_iter_overlap,
+            "overlap_efficiency": efficiency,
         }
     )
     out["overlap_speedup"] = out["t_iter_blocking"] / out["t_iter_overlap"]

@@ -12,11 +12,12 @@ sharded by block-column over units, a static all_to_all send/receive
 schedule moves only the x blocks each unit actually needs — the paper's
 ``C_Xk`` fan-out volume realized on a TPU mesh.
 
-The **overlap plan** (DESIGN.md §9) refines the selective plan with a
-plan-time split of every unit's tiles into a *local* set (x block owned
-by the unit — contractable while the all_to_all is in flight) and a
-*halo* set (x block delivered by the exchange), so the runtime can
-pipeline the exchange behind the local contraction.
+The **overlap plan** (DESIGN.md §9, §13) refines the selective plan with
+a plan-time split of every unit's tiles into a *local* set (x block owned
+by the unit — contractable while the all_to_all is in flight) and K
+prioritized **halo waves** (x blocks delivered by per-wave exchanges,
+nearest ring neighbours first), so the runtime can pipeline each wave's
+transfer behind the previous wave's contraction.
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from repro.sparse.bell import split_tiles_local_halo, stack_ragged
+from repro.sparse.bell import split_tiles_local_halo, stack_ragged, x_block_owner
 from repro.sparse.formats import COO
 
 __all__ = [
@@ -114,37 +115,56 @@ class SelectivePlan:
 
 @dataclasses.dataclass(frozen=True)
 class OverlapPlan:
-    """Selective plan + the plan-time local/halo tile split (DESIGN.md §9).
+    """Selective plan + the plan-time local/halo-wave tile split
+    (DESIGN.md §9, §13).
 
     Every real tile of the :class:`DevicePlan` lands in exactly one of
-    two padded stacked sets:
+    the padded stacked sets:
 
     * **local** — ``tile_col`` is owned by the tile's unit; the
       contraction reads ``x_owned[u][local_slot]`` and needs no
-      communication, so the runtime schedules it *while the all_to_all
-      is in flight*.
-    * **halo** — ``tile_col`` arrives with the exchange; ``halo_slot``
-      indexes the same compact W-block workspace the selective executor
-      gathers from (``selective.tile_col_local`` semantics).
+      communication, so the runtime schedules it *while the first wave's
+      all_to_all is in flight*.
+    * **halo wave k ∈ [0, K)** — ``tile_col`` arrives with wave k's own
+      all_to_all (``wave_send_idx[:, k]``). Each unit's remote blocks
+      are ranked by ring distance to their owner and split into K
+      near-first groups, so early waves land while later transfers are
+      still in flight. ``halo_slot[u, k]`` indexes wave k's compact
+      per-wave workspace (gathered via ``wave_recv_src/lane[u, k]``).
 
-    Padding entries are all-zero tiles (slot/row 0), contributing
-    nothing — the same trick the blocking path uses, so the split costs
-    only the extra padding to the two per-set maxima.
+    ``waves == 1`` reproduces the original two-phase local→halo split
+    (one wave carrying the whole halo). Padding entries are all-zero
+    tiles (slot/row 0), contributing nothing — the same trick the
+    blocking path uses, so the split costs only the extra padding to the
+    per-set maxima.
     """
 
     selective: SelectivePlan
     local_tiles: np.ndarray  # [U, TL, bm, bn] f32
     local_row: np.ndarray  # [U, TL] int32 — global block-row
     local_slot: np.ndarray  # [U, TL] int32 — slot into owned[u]
-    halo_tiles: np.ndarray  # [U, TH, bm, bn] f32
-    halo_row: np.ndarray  # [U, TH] int32 — global block-row
-    halo_slot: np.ndarray  # [U, TH] int32 — slot into the W workspace
+    halo_tiles: np.ndarray  # [U, K, TH, bm, bn] f32
+    halo_row: np.ndarray  # [U, K, TH] int32 — global block-row
+    halo_slot: np.ndarray  # [U, K, TH] int32 — slot into wave k's workspace
     local_counts: np.ndarray  # [U] real local tiles per unit
-    halo_counts: np.ndarray  # [U] real halo tiles per unit
+    halo_wave_counts: np.ndarray  # [U, K] real halo tiles per (unit, wave)
+    wave_send_idx: np.ndarray  # [U, K, U, L] src-major: what u sends to v in wave k
+    wave_recv_src: np.ndarray  # [U, K, W] source unit per wave-workspace slot
+    wave_recv_lane: np.ndarray  # [U, K, W] lane per wave-workspace slot
 
     @property
     def num_units(self) -> int:
         return self.selective.num_units
+
+    @property
+    def waves(self) -> int:
+        """K — number of prioritized halo waves."""
+        return int(self.halo_tiles.shape[1])
+
+    @property
+    def halo_counts(self) -> np.ndarray:
+        """[U] real halo tiles per unit (summed over waves)."""
+        return self.halo_wave_counts.sum(axis=1)
 
     @property
     def t_local(self) -> int:
@@ -153,14 +173,25 @@ class OverlapPlan:
 
     @property
     def t_halo(self) -> int:
-        """Padded halo tiles per unit (the post-exchange phase)."""
-        return int(self.halo_tiles.shape[1])
+        """Padded halo tiles per unit *per wave*."""
+        return int(self.halo_tiles.shape[2])
+
+    @property
+    def wave_wire_blocks(self) -> np.ndarray:
+        """[K] x blocks on the wire per wave (all wave routes are
+        remote; self-needed owned blocks are read in place, never sent)."""
+        return (self.wave_send_idx >= 0).sum(axis=(0, 2, 3))
+
+    @property
+    def wave_messages(self) -> np.ndarray:
+        """[K] (src, dst) point-to-point messages per wave."""
+        return (self.wave_send_idx >= 0).any(axis=3).sum(axis=(0, 2))
 
     @property
     def local_fraction(self) -> float:
         """Real local tiles / real tiles — how much work the exchange
         can hide behind (1.0 == fully local, nothing to overlap)."""
-        tot = int(self.local_counts.sum() + self.halo_counts.sum())
+        tot = int(self.local_counts.sum() + self.halo_wave_counts.sum())
         return float(self.local_counts.sum() / tot) if tot else 1.0
 
 
@@ -172,44 +203,129 @@ ExchangePlan = Optional[Union[SelectivePlan, OverlapPlan]]
 
 
 def build_overlap_plan(
-    plan: DevicePlan, selective: Optional[SelectivePlan] = None
+    plan: DevicePlan,
+    selective: Optional[SelectivePlan] = None,
+    *,
+    waves: int = 1,
 ) -> OverlapPlan:
-    """Split every unit's tiles into local/halo sets over ``selective``'s
-    x ownership (derived from ``plan`` when not supplied)."""
+    """Split every unit's tiles into local + K halo-wave sets over
+    ``selective``'s x ownership (derived from ``plan`` when not
+    supplied).
+
+    Wave assignment: per destination unit, the needed *remote* blocks
+    are ranked ascending by ``(ring distance to owner, block id)`` and
+    cut into ``waves`` equal near-first groups — nearest-neighbour
+    transfers land in wave 0 while far-owner transfers ride later waves
+    the runtime hides behind earlier contractions. Each wave gets its
+    own all_to_all schedule and compact workspace; the union of the
+    waves is exactly the halo set, and self-needed owned blocks are read
+    in place (never shipped, unlike the blocking selective schedule
+    which routes them through the collective).
+    """
+    if waves < 1:
+        raise ValueError(f"need waves >= 1, got {waves}")
     sp = selective if selective is not None else build_selective_plan(plan)
     u_n = plan.num_units
     ncb = plan.num_col_blocks
-    local_of_block = np.zeros(ncb, dtype=np.int32)
-    for u in range(u_n):
-        for slot, g in enumerate(sp.owned[u]):
-            if g >= 0:
-                local_of_block[g] = slot
+    nw = int(waves)
+    owner_of_block = x_block_owner(ncb, u_n)
+    local_of_block = (np.arange(ncb, dtype=np.int64) % sp.blocks_per_unit).astype(
+        np.int32
+    )
 
     splits = [
         split_tiles_local_halo(plan.tile_col[u], int(plan.real_tiles[u]), sp.owned[u])
         for u in range(u_n)
     ]
     local_counts = np.array([s[0].shape[0] for s in splits], dtype=np.int64)
-    halo_counts = np.array([s[1].shape[0] for s in splits], dtype=np.int64)
-    tl = max(int(local_counts.max(initial=0)), 1)
-    th = max(int(halo_counts.max(initial=0)), 1)
 
+    # ---- Wave assignment over the needed remote (unit, block) pairs ----
+    uu, ii = np.nonzero(sp.needed >= 0)
+    gg = sp.needed[uu, ii].astype(np.int64)
+    own = owner_of_block[gg]
+    remote = own != uu
+    ru, rg, ro = uu[remote].astype(np.int64), gg[remote], own[remote]
+    dist = np.minimum((ro - ru) % u_n, (ru - ro) % u_n)
+    order = np.lexsort((rg, dist, ru))  # (unit, distance, block) ascending
+    ru, rg = ru[order], rg[order]
+    cnt = np.bincount(ru, minlength=u_n)
+    off = np.zeros(u_n + 1, dtype=np.int64)
+    np.cumsum(cnt, out=off[1:])
+    rank = np.arange(ru.shape[0], dtype=np.int64) - off[ru]
+    wave = rank * nw // np.maximum(cnt[ru], 1)
+    # Workspace slot within (unit, wave): pairs are (unit, wave)-run
+    # contiguous (wave is monotone in rank), so a run-boundary scan gives
+    # each pair's position inside its wave — ascending (distance, block).
+    wkey = ru * nw + wave
+    new_run = np.ones(wkey.shape[0], dtype=bool)
+    new_run[1:] = wkey[1:] != wkey[:-1]
+    run_start = np.nonzero(new_run)[0]
+    run_id = np.cumsum(new_run) - 1
+    slot = np.arange(wkey.shape[0], dtype=np.int64) - run_start[run_id]
+    wave_block_counts = (
+        np.bincount(wkey, minlength=u_n * nw).reshape(u_n, nw).astype(np.int64)
+    )
+    w_wave = max(int(wave_block_counts.max(initial=0)), 1)
+
+    # (unit, block) → (wave, slot) lookup for the halo tile scatter.
+    lut_wave = np.zeros((u_n, ncb), dtype=np.int32)
+    lut_slot = np.zeros((u_n, ncb), dtype=np.int32)
+    lut_wave[ru, rg] = wave.astype(np.int32)
+    lut_slot[ru, rg] = slot.astype(np.int32)
+
+    # ---- Per-wave all_to_all schedules (shared routing helper) ----
+    per_wave = []
+    lanes_w = 1
+    for k in range(nw):
+        m = wave == k
+        send_k, rs_k, rl_k, lk = _route_pairs(
+            ru[m], rg[m].astype(np.int32), slot[m],
+            owner_of_block, local_of_block, u_n, w_wave,
+        )
+        per_wave.append((send_k, rs_k, rl_k, lk))
+        lanes_w = max(lanes_w, lk)
+    wave_send_idx = np.full((u_n, nw, u_n, lanes_w), -1, dtype=np.int32)
+    wave_recv_src = np.zeros((u_n, nw, w_wave), dtype=np.int32)
+    wave_recv_lane = np.zeros((u_n, nw, w_wave), dtype=np.int32)
+    for k, (send_k, rs_k, rl_k, lk) in enumerate(per_wave):
+        wave_send_idx[:, k, :, :lk] = send_k
+        wave_recv_src[:, k] = rs_k
+        wave_recv_lane[:, k] = rl_k
+
+    # ---- Stacked tile sets ----
+    # Per-(unit, wave) halo *tile* indices first (several tiles can
+    # reference the same needed block, so the tile padding TH is the max
+    # over these, not over the block-pair counts).
+    halo_by_wave = []
+    halo_fill = np.zeros((u_n, nw), dtype=np.int64)
+    for u, (_, halo) in enumerate(splits):
+        hcols = plan.tile_col[u, halo].astype(np.int64)
+        hw = lut_wave[u, hcols]
+        sets = [halo[hw == k] for k in range(nw)]
+        halo_by_wave.append(sets)
+        halo_fill[u] = [s.shape[0] for s in sets]
+    tl = max(int(local_counts.max(initial=0)), 1)
+    th = max(int(halo_fill.max(initial=0)), 1)
     bm, bn = plan.bm, plan.bn
     local_tiles = np.zeros((u_n, tl, bm, bn), dtype=np.float32)
     local_row = np.zeros((u_n, tl), dtype=np.int32)
     local_slot = np.zeros((u_n, tl), dtype=np.int32)
-    halo_tiles = np.zeros((u_n, th, bm, bn), dtype=np.float32)
-    halo_row = np.zeros((u_n, th), dtype=np.int32)
-    halo_slot = np.zeros((u_n, th), dtype=np.int32)
-    for u, (loc, halo) in enumerate(splits):
+    halo_tiles = np.zeros((u_n, nw, th, bm, bn), dtype=np.float32)
+    halo_row = np.zeros((u_n, nw, th), dtype=np.int32)
+    halo_slot = np.zeros((u_n, nw, th), dtype=np.int32)
+    for u, (loc, _) in enumerate(splits):
         k = loc.shape[0]
         local_tiles[u, :k] = plan.tiles[u, loc]
         local_row[u, :k] = plan.tile_row[u, loc]
         local_slot[u, :k] = local_of_block[plan.tile_col[u, loc]]
-        k = halo.shape[0]
-        halo_tiles[u, :k] = plan.tiles[u, halo]
-        halo_row[u, :k] = plan.tile_row[u, halo]
-        halo_slot[u, :k] = sp.tile_col_local[u, halo]
+        for k, sel in enumerate(halo_by_wave[u]):
+            n_k = sel.shape[0]
+            halo_tiles[u, k, :n_k] = plan.tiles[u, sel]
+            halo_row[u, k, :n_k] = plan.tile_row[u, sel]
+            halo_slot[u, k, :n_k] = lut_slot[u, plan.tile_col[u, sel].astype(np.int64)]
+    # The waves exactly partition the halo set: every halo tile's block
+    # is a remote needed pair and lands in exactly one wave.
+    assert int(halo_fill.sum()) == sum(int(s[1].shape[0]) for s in splits)
     return OverlapPlan(
         selective=sp,
         local_tiles=local_tiles,
@@ -219,7 +335,10 @@ def build_overlap_plan(
         halo_row=halo_row,
         halo_slot=halo_slot,
         local_counts=local_counts,
-        halo_counts=halo_counts,
+        halo_wave_counts=halo_fill,
+        wave_send_idx=wave_send_idx,
+        wave_recv_src=wave_recv_src,
+        wave_recv_lane=wave_recv_lane,
     )
 
 
@@ -329,6 +448,46 @@ def tile_col_local_from(
     return np.take_along_axis(lut, tile_col.astype(np.int64), axis=1)
 
 
+def _route_pairs(
+    pu: np.ndarray,
+    pg: np.ndarray,
+    slot: np.ndarray,
+    owner_of_block: np.ndarray,
+    local_of_block: np.ndarray,
+    u_n: int,
+    w_max: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """All_to_all schedule for a set of needed ``(dst unit, block)``
+    pairs with precomputed workspace slots.
+
+    The lane of a block is its rank inside its (src, dst) route —
+    sorting the pairs by (dst, src, block) makes each route a contiguous
+    run. Returns ``(send_idx [U, U, L], recv_src [U, w_max],
+    recv_lane [U, w_max], lanes)``. Shared by the full selective
+    schedule and each overlap wave's schedule.
+    """
+    src = owner_of_block[pg].astype(np.int64)
+    order = np.lexsort((pg, src, pu))
+    run_key = pu[order] * u_n + src[order]
+    new_run = np.ones(run_key.shape[0], dtype=bool)
+    new_run[1:] = run_key[1:] != run_key[:-1]
+    run_start = np.nonzero(new_run)[0]
+    run_id = np.cumsum(new_run) - 1
+    lane_sorted = np.arange(run_key.shape[0], dtype=np.int64) - run_start[run_id]
+    lanes = max(int(lane_sorted.max(initial=-1)) + 1, 1)
+
+    send_idx = np.full((u_n, u_n, lanes), -1, dtype=np.int32)
+    send_idx[src[order], pu[order], lane_sorted] = local_of_block[pg[order]]
+
+    recv_src = np.zeros((u_n, w_max), dtype=np.int32)
+    recv_lane = np.zeros((u_n, w_max), dtype=np.int32)
+    recv_src[pu, slot] = src.astype(np.int32)
+    lane_of_pair = np.empty(pu.shape[0], dtype=np.int64)
+    lane_of_pair[order] = lane_sorted
+    recv_lane[pu, slot] = lane_of_pair.astype(np.int32)
+    return send_idx, recv_src, recv_lane, lanes
+
+
 def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
     """Derive the static all_to_all schedule from the tile structure.
 
@@ -344,9 +503,9 @@ def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
     per = -(-ncb // u_n)
     blocks = np.arange(ncb, dtype=np.int64)
     owned = np.full((u_n, per), -1, dtype=np.int32)
-    owned[blocks // per, blocks % per] = blocks.astype(np.int32)
-    owner_of_block = (blocks // per).astype(np.int32)
+    owner_of_block = x_block_owner(ncb, u_n).astype(np.int32)
     local_of_block = (blocks % per).astype(np.int32)
+    owned[owner_of_block, local_of_block] = blocks.astype(np.int32)
 
     # Needed block-cols per unit (C_Xk at tile granularity): unique
     # (unit, block) pairs over the real tiles. The sorted pair keys give
@@ -368,33 +527,15 @@ def build_selective_plan(plan: DevicePlan) -> SelectivePlan:
     needed[pu, slot] = pg
 
     # Routes: blocks unit v must send to unit u, ascending block order.
-    # Lane of a block = its rank inside its (v, u) route; sorting the
-    # pairs by (dst, src, block) makes each route a contiguous run.
-    src = owner_of_block[pg].astype(np.int64)
-    order = np.lexsort((pg, src, pu))
-    run_key = pu[order] * u_n + src[order]
-    new_run = np.ones(run_key.shape[0], dtype=bool)
-    new_run[1:] = run_key[1:] != run_key[:-1]
-    run_start = np.nonzero(new_run)[0]
-    run_id = np.cumsum(new_run) - 1
-    lane_sorted = np.arange(run_key.shape[0], dtype=np.int64) - run_start[run_id]
-    lanes = max(int(lane_sorted.max(initial=-1)) + 1, 1)
-
-    send_idx = np.full((u_n, u_n, lanes), -1, dtype=np.int32)
-    send_idx[src[order], pu[order], lane_sorted] = local_of_block[pg[order]]
-
-    recv_src = np.zeros((u_n, w_max), dtype=np.int32)
-    recv_lane = np.zeros((u_n, w_max), dtype=np.int32)
-    recv_src[pu, slot] = src.astype(np.int32)
-    lane_of_pair = np.empty(pairs.shape[0], dtype=np.int64)
-    lane_of_pair[order] = lane_sorted
-    recv_lane[pu, slot] = lane_of_pair.astype(np.int32)
+    send_idx, recv_src, recv_lane, lanes = _route_pairs(
+        pu, pg, slot, owner_of_block, local_of_block, u_n, w_max
+    )
 
     tile_col_local = tile_col_local_from(needed, plan.tile_col, ncb).astype(
         plan.tile_col.dtype
     )
 
-    wire = int((src != pu).sum())
+    wire = int((owner_of_block[pg].astype(np.int64) != pu).sum())
     naive = (u_n - 1) * ncb  # all-gather: every unit receives all remote blocks
     return SelectivePlan(
         num_units=u_n,

@@ -346,11 +346,24 @@ class SparseServeEngine:
         advance every occupied lane by exactly one solver iteration
         (one batched SpMM per lane). Returns whether any work was done
         — ``False`` means idle (empty queue, empty lanes), mirroring
-        the LM engine's no-op step."""
+        the LM engine's no-op step.
+
+        Lanes step in **demand order** — occupied slots plus tickets
+        still queued for the lane, busiest first (ties keep lane
+        creation order; the sort is stable). Within one tick every lane
+        still advances exactly once, but the heavily loaded lanes run
+        earliest, so their deadline checks see the least wall-clock
+        drift and their slots free up first for the next refill."""
         now = self.clock()
         self._refill(now)
         worked = bool(self._lanes)
-        for key in list(self._lanes):
+        queued = collections.Counter(t.lane_key for t in self._queue)
+        order = sorted(
+            self._lanes,
+            key=lambda k: self._lanes[k].occupied + queued[k],
+            reverse=True,
+        )
+        for key in order:
             lane = self._lanes[key]
             if lane.occupied == 0:
                 # Idle lane with nothing queued for it: drop, releasing

@@ -33,7 +33,20 @@ __all__ = [
     "split_tiles_local_halo",
     "stack_ragged",
     "ragged_from_stacked",
+    "x_block_owner",
 ]
+
+
+def x_block_owner(num_col_blocks: int, num_units: int) -> np.ndarray:
+    """The x-ownership map every exchange plan assumes: block-cols are
+    assigned to units in contiguous ``ceil(NCB / U)`` runs. Returns the
+    ``[NCB]`` int64 owner-unit array. Both
+    :func:`repro.pmvc.plan_device.build_selective_plan` and the
+    locality-affinity tables in :mod:`repro.core.combined` derive
+    ownership from this single definition, so the partitioner optimizes
+    exactly the layout the runtime distributes."""
+    per = -(-num_col_blocks // num_units)
+    return np.arange(num_col_blocks, dtype=np.int64) // per
 
 
 def stack_ragged(

@@ -41,18 +41,23 @@ def _check_split_properties(dp, sp):
 
 
 def _check_overlap_plan(dp, op):
-    """OverlapPlan mirrors the split and pads with zero tiles."""
+    """OverlapPlan mirrors the split and pads with zero tiles (the halo
+    set carries a wave axis — per-(unit, wave) counts must sum back to
+    the per-unit halo count)."""
     np.testing.assert_array_equal(
         op.local_counts + op.halo_counts, dp.real_tiles
     )
+    np.testing.assert_array_equal(op.halo_wave_counts.sum(axis=1), op.halo_counts)
     assert op.t_local >= int(op.local_counts.max(initial=0))
-    assert op.t_halo >= int(op.halo_counts.max(initial=0))
+    assert op.t_halo >= int(op.halo_wave_counts.max(initial=0))
     for u in range(dp.num_units):
-        kl, kh = int(op.local_counts[u]), int(op.halo_counts[u])
+        kl = int(op.local_counts[u])
         assert not op.local_tiles[u, kl:].any()  # zero padding
-        assert not op.halo_tiles[u, kh:].any()
+        for k in range(op.waves):
+            kh = int(op.halo_wave_counts[u, k])
+            assert not op.halo_tiles[u, k, kh:].any()
         # Real content is preserved: the split moves every real tile's
-        # values into exactly one of the two sets.
+        # values into exactly one of the sets.
         moved = float(
             op.local_tiles[u].astype(np.float64).sum()
             + op.halo_tiles[u].astype(np.float64).sum()

@@ -1,0 +1,242 @@
+"""Multi-wave halo pipelining properties (DESIGN.md §13).
+
+``build_overlap_plan(..., waves=K)`` splits every unit's remote x-block
+needs into K prioritized waves. These tests pin the contract the
+runtime leans on:
+
+* the waves *partition* each unit's remote needs — every halo block is
+  delivered in exactly one wave, no wave ships a self-owned block, and
+  nearer owners (ring distance) never land in a later wave than farther
+  ones;
+* execution is exact for any K — with integer-valued tiles and integer
+  x the fp32 contraction is order-independent, so all wave counts must
+  agree *bitwise* with each other and with the dense reference;
+* degenerate shapes (single unit / all-local, fully off-diagonal /
+  all-halo, empty units, K larger than any unit's halo) build and run;
+* a multi-wave plan survives the plan store: ``save_session`` /
+  ``load_session`` round-trips every wave array bitwise (v2), while the
+  legacy v1 format refuses waves > 1 loudly;
+* the locality-aware partitioner objective actually raises the local
+  tile fraction on matrices with exploitable structure (golden pins at
+  weight 0 live in test_plan_golden.py).
+"""
+import numpy as np
+import pytest
+
+from repro.api import Topology, distribute
+from repro.api.plancache import load_session, save_session
+from repro.pmvc.dist import phase_costs, pmvc_simulate_overlap
+from repro.pmvc.plan_device import build_overlap_plan, pack_units
+from repro.sparse.bell import x_block_owner
+from repro.sparse.formats import COO, dense_from_coo
+from repro.sparse.generate import banded_coo, random_coo
+
+
+def _int_coo(n: int, nnz: int, seed: int) -> COO:
+    """Random COO whose values are small integers — fp32-exact sums."""
+    a = random_coo(n, nnz, seed=seed)
+    vals = np.random.default_rng(seed).integers(-3, 4, size=a.nnz)
+    return COO(a.shape, a.row, a.col, vals.astype(np.float32))
+
+
+def _delivered_per_wave(op):
+    """{dst: [set(blocks of wave 0), ..., set(wave K-1)]} from the wave
+    send schedules (src-major, like the collective reads them)."""
+    sp = op.selective
+    u_n = sp.num_units
+    out = {u: [set() for _ in range(op.waves)] for u in range(u_n)}
+    for src in range(u_n):
+        for k in range(op.waves):
+            for dst in range(u_n):
+                for slot in op.wave_send_idx[src, k, dst]:
+                    if slot >= 0:
+                        out[dst][k].add(int(sp.owned[src, slot]))
+    return out
+
+
+@pytest.mark.parametrize("waves", [2, 3])
+def test_wave_partition_properties(waves):
+    a = random_coo(240, 3200, seed=waves)
+    sess = distribute(
+        a, topology=Topology(2, 2), combo="NL-HL",
+        exchange=f"overlap:{waves}", block=16,
+    )
+    dp, op = sess.device_plan, sess.selective
+    sp = op.selective
+    assert op.waves == waves
+    owner = x_block_owner(dp.num_col_blocks, dp.num_units)
+    delivered = _delivered_per_wave(op)
+    for u in range(dp.num_units):
+        owned = {int(g) for g in sp.owned[u] if g >= 0}
+        remote_needed = {
+            int(g) for g in dp.tile_col[u, : int(dp.real_tiles[u])]
+        } - owned
+        per_wave = delivered[u]
+        # Waves are disjoint and together cover exactly the remote needs.
+        union = set()
+        for k, blocks in enumerate(per_wave):
+            assert not (union & blocks), f"unit {u}: wave {k} re-delivers"
+            union |= blocks
+            assert not (blocks & owned), "self-owned block on the wire"
+        assert union == remote_needed
+        # Ring-distance priority: a block in wave k is never farther
+        # from its owner than any block in wave k+1.
+        def max_dist(blocks):
+            return max(
+                min((int(owner[g]) - u) % dp.num_units,
+                    (u - int(owner[g])) % dp.num_units)
+                for g in blocks
+            )
+        dists = [max_dist(b) for b in per_wave if b]
+        assert dists == sorted(dists)
+    # No self-routes in any wave schedule.
+    for u in range(dp.num_units):
+        assert (op.wave_send_idx[u, :, u] == -1).all()
+
+
+@pytest.mark.parametrize("waves", [1, 2, 3, 7])
+def test_wave_spmm_bitwise_across_k(waves):
+    """Integer tiles + integer x: every K must give the *same bits*."""
+    a = _int_coo(192, 2400, seed=11)
+    x = np.random.default_rng(7).integers(-4, 5, size=(3, 192))
+    x = x.astype(np.float32)
+    ref_sess = distribute(
+        a, topology=Topology(2, 2), combo="NC-HC", exchange="overlap", block=16
+    )
+    y_ref = ref_sess.spmv(x)
+    np.testing.assert_array_equal(
+        y_ref, (dense_from_coo(a) @ x.T).T.astype(np.float32)
+    )
+    sess = ref_sess.with_exchange(f"overlap:{waves}")
+    assert sess.selective.waves == waves
+    np.testing.assert_array_equal(sess.spmv(x), y_ref)
+
+
+def test_single_unit_plan_is_all_local():
+    a = random_coo(96, 900, seed=3)
+    sess = distribute(
+        a, topology=Topology(1, 1), combo="NL-HL", exchange="overlap:2", block=16
+    )
+    op = sess.selective
+    assert op.halo_wave_counts.sum() == 0
+    assert op.local_fraction == 1.0
+    assert (op.wave_send_idx == -1).all()
+    x = np.random.default_rng(0).standard_normal(96).astype(np.float32)
+    np.testing.assert_allclose(
+        sess.spmv(x), dense_from_coo(a) @ x, rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("waves", [1, 2])
+def test_all_halo_off_diagonal(waves):
+    """Anti-diagonal coupling: every tile references the *other* unit's
+    blocks, so the local set is empty and everything rides the waves."""
+    n, bn, units = 64, 16, 2
+    rng = np.random.default_rng(5)
+    half = n // 2
+    rows = np.concatenate([rng.integers(0, half, 200),
+                           rng.integers(half, n, 200)])
+    cols = np.concatenate([rng.integers(half, n, 200),
+                           rng.integers(0, half, 200)])
+    a = COO((n, n), rows.astype(np.int32), cols.astype(np.int32),
+            rng.integers(1, 4, 400).astype(np.float32))
+    elem_unit = (a.row >= half).astype(np.int32)
+    dp = pack_units(a, elem_unit, units, bn, bn)
+    op = build_overlap_plan(dp, waves=waves)
+    assert op.local_counts.sum() == 0
+    assert op.local_fraction == 0.0
+    np.testing.assert_array_equal(op.halo_counts, dp.real_tiles)
+    x = rng.integers(-2, 3, n).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pmvc_simulate_overlap(dp, op, x)),
+        (dense_from_coo(a) @ x).astype(np.float32),
+    )
+
+
+def test_empty_unit_and_oversized_k():
+    """A unit with zero tiles, and K larger than any halo count: both
+    degenerate to padded no-op waves, execution stays exact."""
+    a = _int_coo(80, 600, seed=9)
+    elem_unit = np.where(a.row < 40, 0, 1).astype(np.int32)  # unit 2 empty
+    dp = pack_units(a, elem_unit, 3, 16, 16)
+    x = np.random.default_rng(1).integers(-3, 4, 80).astype(np.float32)
+    ref = (dense_from_coo(a) @ x).astype(np.float32)
+    for waves in (1, 4, 9):
+        op = build_overlap_plan(dp, waves=waves)
+        assert op.waves == waves
+        np.testing.assert_array_equal(
+            op.local_counts + op.halo_counts, dp.real_tiles
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pmvc_simulate_overlap(dp, op, x)), ref
+        )
+        costs = phase_costs(dp, op)
+        assert costs["waves"] == float(waves)
+
+
+def test_wave_plan_store_roundtrip(tmp_path):
+    a = _int_coo(160, 2000, seed=21)
+    sess = distribute(
+        a, topology=Topology(2, 2), combo="NC-HL", exchange="overlap:3", block=16
+    )
+    path = save_session(sess, str(tmp_path / "waves3"))
+    loaded = load_session(path)
+    op, op2 = sess.selective, loaded.selective
+    assert op2.waves == 3
+    for field in (
+        "local_tiles", "local_row", "local_slot", "halo_tiles", "halo_row",
+        "halo_slot", "local_counts", "halo_wave_counts", "wave_send_idx",
+        "wave_recv_src", "wave_recv_lane",
+    ):
+        np.testing.assert_array_equal(
+            getattr(op, field), getattr(op2, field), err_msg=field
+        )
+    x = np.random.default_rng(2).integers(-4, 5, 160).astype(np.float32)
+    np.testing.assert_array_equal(sess.spmv(x), loaded.spmv(x))
+
+
+def test_v1_format_refuses_multiwave(tmp_path):
+    a = random_coo(96, 900, seed=13)
+    sess = distribute(
+        a, topology=Topology(2, 1), combo="NL-HL", exchange="overlap:2", block=16
+    )
+    with pytest.raises(ValueError, match="predates multi-wave"):
+        save_session(sess, str(tmp_path / "legacy"), format_version=1)
+
+
+@pytest.mark.parametrize("combo", ["NL-HL", "hyper"])
+def test_locality_weight_raises_local_fraction(combo):
+    """On a banded matrix the locality term should pull each unit's
+    elements toward the column blocks it owns — strictly more local
+    tiles than the cut-only objective (both partitioner families)."""
+    a = banded_coo(256, 4000, seed=17)
+    topo = Topology(2, 2)
+    base = distribute(
+        a, topology=topo, combo=combo, exchange="overlap", block=16,
+        locality_weight=0.0,
+    )
+    tuned = distribute(
+        a, topology=topo, combo=combo, exchange="overlap", block=16,
+        locality_weight=4.0,
+    )
+    assert tuned.selective.local_fraction > base.selective.local_fraction
+    # Both remain exact.
+    x = np.random.default_rng(3).standard_normal(256).astype(np.float32)
+    ref = dense_from_coo(a) @ x
+    np.testing.assert_allclose(base.spmv(x), ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tuned.spmv(x), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_auto_locality_default_for_overlap():
+    """``distribute`` with no explicit weight sweeps the locality grid
+    for overlap-family exchanges and returns a plan at least as good
+    (modeled pipeline time) as the cut-only one."""
+    a = banded_coo(192, 2600, seed=29)
+    topo = Topology(2, 2)
+    auto = distribute(a, topology=topo, combo="NL-HL", exchange="overlap:2",
+                      block=16)
+    fixed = distribute(a, topology=topo, combo="NL-HL", exchange="overlap:2",
+                       block=16, locality_weight=0.0)
+    t_auto = phase_costs(auto.device_plan, auto.selective)["t_iter_overlap"]
+    t_fixed = phase_costs(fixed.device_plan, fixed.selective)["t_iter_overlap"]
+    assert t_auto <= t_fixed * (1 + 1e-9)

@@ -412,3 +412,59 @@ def test_percentile_nearest_rank():
     assert percentile(xs, 100) == 100.0
     with pytest.raises(ValueError):
         percentile(xs, 101)
+
+
+def _probe_step_order(eng):
+    """Wrap every lane's stepper to record the order ``step`` visits
+    lanes on subsequent ticks."""
+    calls = []
+    for key, lane in eng._lanes.items():
+        orig = lane.stepper.step
+
+        def wrapped(active, _k=key, _orig=orig):
+            calls.append(_k)
+            return _orig(active)
+
+        lane.stepper.step = wrapped
+    return calls
+
+
+def test_step_demand_order_busiest_lane_first(sessions):
+    """Demand = occupied slots + still-queued tickets: a lane with the
+    same occupancy but a deeper backlog must step before one created
+    earlier, and an outright busier lane always goes first."""
+    eng = SparseServeEngine(batch_slots=2, max_queue=64, default_iters=6)
+    for name, sess in sessions.items():
+        eng.register_graph(name, sess)
+    b = np.ones(N, np.float32)
+    # g1 lane first (creation order), 2 tickets -> occupied 2, queued 0.
+    for _ in range(2):
+        eng.submit("g1", "jacobi", payload={"b": b}, iters=6)
+    # g2 lane second, 5 tickets -> occupied 2, queued 3: higher demand.
+    for _ in range(5):
+        eng.submit("g2", "jacobi", payload={"b": b}, iters=6)
+    eng.step()  # creates both lanes (order unobserved on this tick)
+    g1 = next(k for k in eng._lanes if k[0] == "g1")
+    g2 = next(k for k in eng._lanes if k[0] == "g2")
+    calls = _probe_step_order(eng)
+    eng.step()
+    assert calls == [g2, g1]  # backlog outranks creation order
+
+
+def test_step_demand_order_stable_ties(sessions):
+    """Equal demand falls back to lane creation order (stable sort)."""
+    eng = SparseServeEngine(batch_slots=4, max_queue=64, default_iters=6)
+    for name, sess in sessions.items():
+        eng.register_graph(name, sess)
+    b = np.ones(N, np.float32)
+    eng.submit("g2", "jacobi", payload={"b": b}, iters=6)
+    eng.submit("g1", "jacobi", payload={"b": b}, iters=6)
+    eng.step()
+    g1 = next(k for k in eng._lanes if k[0] == "g1")
+    g2 = next(k for k in eng._lanes if k[0] == "g2")
+    calls = _probe_step_order(eng)
+    eng.step()
+    assert calls == [g2, g1]  # g2 admitted (and created) first
+    # Results are untouched by scheduling order: both finish cleanly.
+    eng.run_until_drained()
+    assert eng.metrics.snapshot()["completed"] == 2
