@@ -178,6 +178,34 @@ def _time_planning(cfg: Dict) -> Dict:
         SparseSession.load(plan_file, lazy=False)
         load_mat = time.perf_counter() - t0
         plancache.clear_memo()
+    # Incremental update vs cold replan (DESIGN.md §14): a value-dominant
+    # delta touching ≤1% of nnz, clustered the way real graph updates are
+    # (a contiguous row range), patched in place by SparseSession.update.
+    import numpy as np
+
+    from repro.api import SparseDelta
+
+    sess = distribute(a, topology=topo, combo=cfg["combo"],
+                      exchange=cfg["exchange"], block=cfg["block"],
+                      seed=cfg["seed"])
+    rng = np.random.default_rng(cfg["seed"] + 1)
+    k = max(1, a.nnz // 100)
+    idx = np.arange(k) + (a.nnz - k) // 2  # contiguous rows mid-matrix
+    delta = SparseDelta.upserts(
+        a.shape, a.row[idx], a.col[idx],
+        rng.standard_normal(k).astype(np.float32),
+    )
+    t0 = time.perf_counter()
+    patched = sess.update(delta)
+    update_s = time.perf_counter() - t0
+    out["update"] = {
+        "delta_nnz_fraction": round(k / a.nnz, 4),
+        "update_s": update_s,
+        "action": patched.update_report.action,
+        "touched_tiles": int(patched.update_report.touched_tiles),
+        "total_tiles": int(patched.update_report.total_tiles),
+        "update_vs_cold": round(cold / max(update_s, 1e-9), 1),
+    }
     out["distribute_cold_s"] = cold
     out["cache"] = {
         "memo_s": memo,
@@ -207,6 +235,8 @@ def plan_at_scale(write: bool = True) -> Dict:
     )
     quick = _time_planning(QUICK_CONFIG)
     doc = {"plan_at_scale": scale, "quick": quick}
+    # Headline §14 number: incremental update vs cold replan at scale.
+    doc["update_vs_cold"] = scale["update"]["update_vs_cold"]
     doc["quick_baseline"] = _load_quick_baseline() or {
         "distribute_cold_s": quick["distribute_cold_s"],
         "probe_s": _probe_runner_s(),

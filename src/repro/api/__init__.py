@@ -69,7 +69,8 @@ from repro.api.plancache import (
     set_memo_limit,
 )
 from repro.api.registry import Registry
-from repro.api.session import SparseSession, distribute
+from repro.api.session import SparseSession, UpdateReport, distribute
+from repro.sparse.delta import SparseDelta
 from repro.api.solvers import (
     SOLVERS,
     STEPPERS,
@@ -84,6 +85,8 @@ __all__ = [
     "Topology",
     "distribute",
     "SparseSession",
+    "SparseDelta",
+    "UpdateReport",
     "SolveResult",
     "BatchStepper",
     "PartitionResult",

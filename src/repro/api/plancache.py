@@ -46,9 +46,26 @@ for a serving process, at its first ``spmv``. ``np.savez`` stores
 members uncompressed (plans are mostly f32 payloads where zlib costs
 seconds and saves little), so members are ``np.memmap``-ed straight out
 of the archive where possible instead of buffered through the zip
-reader. Note the OS may reclaim a deleted archive only after mapped
-views drop: avoid :func:`gc`-pruning a directory while sessions loaded
-from it are still unmaterialized.
+reader.
+
+**GC-vs-lazy-load safety.** A lazily loaded session holds only a *path*
+until materialization — if :func:`gc` pruned its archive first, the
+first ``spmv`` would fail with a missing file. Every lazy load therefore
+registers the session in a per-path weak registry, and :func:`gc` skips
+any archive a live, still-unmaterialized session was loaded from
+(reported as ``files_pinned``). Once materialized, the arrays are
+mmap/heap-backed and POSIX keeps a deleted file's pages alive for
+existing maps, so materialized sessions no longer pin anything.
+
+**Generations + delta journal.** :func:`save_generation` gives a named
+plan a monotonically numbered archive lineage with an atomic
+``plan-<name>.lastgood`` marker advanced only after a complete write —
+a crash mid-save leaves the previous generation committed, never a torn
+one. :func:`journal_delta` persists streaming updates
+(:class:`repro.sparse.delta.SparseDelta`) against the committed
+generation so :func:`replay_journal` can roll a recovered session
+forward to the pre-crash state; :func:`gc` never prunes the last-good
+archive or its journal.
 """
 from __future__ import annotations
 
@@ -57,10 +74,13 @@ import hashlib
 import itertools
 import json
 import os
+import re
+import threading
 import time
+import weakref
 import zipfile
 import zlib
-from typing import Callable, Dict, Optional, Set, Tuple, TYPE_CHECKING, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, TYPE_CHECKING, Union
 
 import numpy as np
 
@@ -73,6 +93,7 @@ from repro.pmvc.plan_device import (
     tile_col_local_from,
 )
 from repro.sparse.bell import ragged_from_stacked, stack_ragged
+from repro.sparse.delta import SparseDelta
 from repro.sparse.formats import COO
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -89,6 +110,12 @@ __all__ = [
     "clear_memo",
     "set_memo_limit",
     "gc",
+    "save_generation",
+    "last_good_generation",
+    "load_last_good",
+    "journal_delta",
+    "load_journal",
+    "replay_journal",
 ]
 
 FORMAT_VERSION = 2
@@ -149,38 +176,46 @@ def clear_memo() -> None:
 
 
 def _session_nbytes(sess: "SparseSession") -> int:
-    """Approximate bytes a memoized session pins: the summed planning
-    arrays for a materialized session, or the archive's recorded payload
-    size for a lazily loaded one (materialization may add the re-padded
-    difference on top — close enough for an eviction budget)."""
-    hint = getattr(sess, "_payload_nbytes", None)
-    if hint is not None and not sess.is_materialized:
-        return int(hint)
+    """**Resident** bytes a memoized session pins right now: the summed
+    numpy arrays of the planning artifacts that have actually
+    materialized. A slot still behind a pending thunk counts zero — a
+    lazy session holds only a path and meta until something touches it,
+    so charging it the archive's logical payload size (the pre-fix
+    behavior) made ``set_memo_limit(max_bytes=...)`` evict warm
+    materialized plans to make room for cold ones occupying ~nothing.
+    The accounting is refreshed at eviction time (:func:`_evict_memo`),
+    so a session that materializes *after* insertion is re-charged its
+    real footprint on the next bound check."""
     total = 0
-    a = sess.matrix
-    for arr in (a.row, a.col, a.val):
-        total += arr.nbytes
-    part = sess.partition
-    total += part.elem_unit.nbytes
-    plan = part.plan
-    if plan is not None:
-        total += plan.elem_node.nbytes + plan.elem_core.nbytes
-        for st in (plan.node_stats, plan.core_stats):
-            total += st.nnz.nbytes + st.c_x.nbytes + st.c_y.nbytes + st.fr_x.nbytes
-    dp = sess.device_plan
-    total += dp.tiles.nbytes + dp.tile_row.nbytes + dp.tile_col.nbytes
-    sp = sess.selective
-    op = sp if isinstance(sp, OverlapPlan) else None
-    if op is not None:
-        for f in ("local_tiles", "local_row", "local_slot",
-                  "halo_tiles", "halo_row", "halo_slot",
-                  "wave_send_idx", "wave_recv_src", "wave_recv_lane"):
-            total += getattr(op, f).nbytes
-        sp = op.selective
-    if sp is not None:
-        for f in ("owned", "send_idx", "recv_src", "recv_lane", "needed",
-                  "tile_col_local"):
-            total += getattr(sp, f).nbytes
+    if not callable(sess._matrix):
+        a = sess._matrix
+        total += a.row.nbytes + a.col.nbytes + a.val.nbytes
+    if not callable(sess._partition):
+        part = sess._partition
+        total += part.elem_unit.nbytes
+        plan = part.plan
+        if plan is not None:
+            total += plan.elem_node.nbytes + plan.elem_core.nbytes
+            for st in (plan.node_stats, plan.core_stats):
+                total += (
+                    st.nnz.nbytes + st.c_x.nbytes + st.c_y.nbytes + st.fr_x.nbytes
+                )
+    if not callable(sess._device_plan):
+        dp = sess._device_plan
+        total += dp.tiles.nbytes + dp.tile_row.nbytes + dp.tile_col.nbytes
+    if not callable(sess._selective):
+        sp = sess._selective
+        op = sp if isinstance(sp, OverlapPlan) else None
+        if op is not None:
+            for f in ("local_tiles", "local_row", "local_slot",
+                      "halo_tiles", "halo_row", "halo_slot",
+                      "wave_send_idx", "wave_recv_src", "wave_recv_lane"):
+                total += getattr(op, f).nbytes
+            sp = op.selective
+        if sp is not None:
+            for f in ("owned", "send_idx", "recv_src", "recv_lane", "needed",
+                      "tile_col_local"):
+                total += getattr(sp, f).nbytes
     return total
 
 
@@ -199,8 +234,45 @@ def _evict_memo() -> None:
         while len(_MEMO) > max(int(_MEMO_MAX), 0):
             pop_oldest()
     if _MEMO_MAX_BYTES is not None:
+        # Lazy sessions materialize after insertion; re-measure so the
+        # byte bound sees resident reality, not insertion-time estimates.
+        for k, s in _MEMO.items():
+            _MEMO_NBYTES[k] = _session_nbytes(s)
         while len(_MEMO) > 1 and sum(_MEMO_NBYTES.values()) > _MEMO_MAX_BYTES:
             pop_oldest()
+
+
+# Lazy sessions loaded from disk, per archive path (weak — sessions the
+# caller dropped don't pin anything). gc() skips a plan file while any
+# live session loaded from it is still unmaterialized: pruning it would
+# turn that session's first materialization into a missing-file error
+# (the PR 5 gc-vs-lazy-load race). Materialized sessions are safe — the
+# arrays are heap- or mmap-backed, and POSIX keeps a deleted file's
+# pages alive for existing maps.
+_LIVE_LAZY: Dict[str, "weakref.WeakSet"] = {}
+
+# Serializes lazy-load registration against gc's check-then-remove: a
+# load that completes before gc examines its file is pinned; one that
+# starts after the file is gone misses loudly at *load* time (a cache
+# miss, replanned) — never at materialization time with a session
+# already handed out.
+_STORE_LOCK = threading.Lock()
+
+
+def _register_lazy(path: str, sess: "SparseSession") -> None:
+    _LIVE_LAZY.setdefault(os.path.abspath(path), weakref.WeakSet()).add(sess)
+
+
+def _lazy_pinned_paths() -> Set[str]:
+    """Archive paths at least one live, unmaterialized session points at."""
+    pinned: Set[str] = set()
+    for p, refs in list(_LIVE_LAZY.items()):
+        live = list(refs)
+        if any(not s.is_materialized for s in live):
+            pinned.add(p)
+        elif not live:
+            _LIVE_LAZY.pop(p, None)  # all sessions gone; drop the slot
+    return pinned
 
 
 def _matrix_digest(a: COO) -> bytes:
@@ -790,6 +862,19 @@ def load_session(
     sess._payload_nbytes = meta.get("nbytes")
     if not lazy:
         sess.materialize()
+    else:
+        # Pin the archive against gc() until the session materializes
+        # (or is dropped) — see _LIVE_LAZY. Register-then-verify under
+        # the store lock: gc's check-then-remove holds the same lock, so
+        # either it sees this pin, or it already removed the file and
+        # the load fails *here* (a clean miss), never later at
+        # materialization with the session in a caller's hands.
+        with _STORE_LOCK:
+            _register_lazy(path, sess)
+            if not os.path.exists(path):
+                raise ValueError(
+                    f"plan file {path!r} was garbage-collected mid-load"
+                )
     return sess
 
 
@@ -813,11 +898,19 @@ def gc(cache_dir: str, budget_bytes: int, *, keep=()) -> Dict[str, int]:
     not mount-option-dependent) until the directory total is within
     ``budget_bytes``. ``keep`` paths are never removed, whatever the
     budget — :func:`cached_distribute` protects the plan it just wrote.
-    Orphaned ``.tmp-*`` files from crashed writers older than ~10 min
-    are swept as well. Returns ``{"files_removed", "bytes_freed",
-    "bytes_in_use", "tmp_removed"}``.
+
+    Two more classes of files are *pinned* (skipped, counted in
+    ``files_pinned``): archives a live lazy session was loaded from and
+    has not yet materialized (removing one would break that session's
+    first ``spmv`` — the PR 5 gc-vs-lazy-load race), and each lineage's
+    last-good generation archive plus its journal deltas (the recovery
+    contract of :func:`save_generation`). Orphaned ``.tmp-*`` files from
+    crashed writers older than ~10 min are swept as well. Returns
+    ``{"files_removed", "bytes_freed", "bytes_in_use", "tmp_removed",
+    "files_pinned"}``.
     """
     keep_paths = {os.path.abspath(p) for p in keep}
+    pinned_paths = _lazy_pinned_paths()
     now = time.time()
     entries = []
     tmp_removed = 0
@@ -825,7 +918,25 @@ def gc(cache_dir: str, budget_bytes: int, *, keep=()) -> Dict[str, int]:
         listing = os.listdir(cache_dir)
     except OSError:
         return {"files_removed": 0, "bytes_freed": 0, "bytes_in_use": 0,
-                "tmp_removed": 0}
+                "tmp_removed": 0, "files_pinned": 0}
+    # Last-good generation archives (and their journals) are the crash
+    # recovery story — never LRU them out, whatever the budget.
+    for name in listing:
+        if not name.endswith(".lastgood"):
+            continue
+        try:
+            with open(os.path.join(cache_dir, name)) as fh:
+                gen = int(fh.read().strip())
+        except (OSError, ValueError):
+            continue
+        stem = name[: -len(".lastgood")]
+        pinned_paths.add(
+            os.path.abspath(os.path.join(cache_dir, f"{stem}.gen{gen:06d}.npz"))
+        )
+        prefix = f"{stem}.gen{gen:06d}.delta"
+        for other in listing:
+            if other.startswith(prefix) and other.endswith(".npz"):
+                pinned_paths.add(os.path.abspath(os.path.join(cache_dir, other)))
     for name in listing:
         p = os.path.join(cache_dir, name)
         try:
@@ -843,21 +954,221 @@ def gc(cache_dir: str, budget_bytes: int, *, keep=()) -> Dict[str, int]:
         if name.startswith("plan-") and name.endswith(".npz"):
             entries.append((st.st_atime, st.st_size, p))
     total = sum(size for _, size, _ in entries)
-    removed = freed = 0
+    removed = freed = pinned = 0
     for _, size, p in sorted(entries):
         if total <= budget_bytes:
             break
-        if os.path.abspath(p) in keep_paths:
+        ap = os.path.abspath(p)
+        if ap in keep_paths:
             continue
-        try:
-            os.remove(p)
-        except OSError:
-            continue
+        # Check-then-remove is atomic w.r.t. lazy loads (see
+        # _STORE_LOCK): the lazy pin set is re-read here so a load that
+        # completed during this gc pass is honored, not just the ones
+        # alive when the pass started.
+        with _STORE_LOCK:
+            if ap in pinned_paths or ap in _lazy_pinned_paths():
+                pinned += 1
+                continue
+            try:
+                os.remove(p)
+            except OSError:
+                continue
         total -= size
         removed += 1
         freed += size
     return {"files_removed": removed, "bytes_freed": freed,
-            "bytes_in_use": total, "tmp_removed": tmp_removed}
+            "bytes_in_use": total, "tmp_removed": tmp_removed,
+            "files_pinned": pinned}
+
+
+# ---------------------------------------------------------------------------
+# Generations + delta journal: the recovery substrate for elastic serving.
+#
+# A *lineage* is a named sequence of checkpointed plans for one evolving
+# graph. save_generation() writes ``plan-{name}.gen000007.npz`` then
+# atomically advances the ``plan-{name}.lastgood`` marker — readers that
+# follow the marker never observe a half-written generation. Between
+# checkpoints, journal_delta() appends the SparseDeltas applied since the
+# last good generation; load_last_good() + replay_journal() reconstructs
+# the exact live session (updates are deterministic, so the replayed
+# chain is bitwise-identical to the uninterrupted one).
+
+
+def _lineage_stem(name: str) -> str:
+    if not name or "/" in name or os.sep in name:
+        raise ValueError(f"bad lineage name {name!r}")
+    return f"plan-{name}"
+
+
+def _gen_archive(cache_dir: str, name: str, gen: int) -> str:
+    return os.path.join(cache_dir, f"{_lineage_stem(name)}.gen{gen:06d}.npz")
+
+
+def _marker_path(cache_dir: str, name: str) -> str:
+    return os.path.join(cache_dir, f"{_lineage_stem(name)}.lastgood")
+
+
+def _list_generations(cache_dir: str, name: str) -> List[int]:
+    """Generation numbers with an archive on disk, ascending."""
+    pat = re.compile(rf"^{re.escape(_lineage_stem(name))}\.gen(\d+)\.npz$")
+    gens = []
+    try:
+        listing = os.listdir(cache_dir)
+    except OSError:
+        return []
+    for fname in listing:
+        m = pat.match(fname)
+        if m:
+            gens.append(int(m.group(1)))
+    return sorted(gens)
+
+
+def last_good_generation(cache_dir: str, name: str) -> Optional[int]:
+    """The marker's committed generation, or None (no marker / garbage)."""
+    try:
+        with open(_marker_path(cache_dir, name)) as fh:
+            return int(fh.read().strip())
+    except (OSError, ValueError):
+        return None
+
+
+def save_generation(
+    sess: "SparseSession", cache_dir: str, name: str, *, before_commit=None
+) -> tuple:
+    """Checkpoint ``sess`` as the next generation of lineage ``name``.
+
+    Three ordered, individually-atomic steps: (1) write the generation
+    archive (:func:`save_session`'s temp+rename), (2) atomically advance
+    the ``.lastgood`` marker, (3) prune journal deltas of *older*
+    generations (superseded by the new checkpoint). A crash between any
+    two steps leaves the previous generation fully recoverable — the
+    marker only ever points at a complete archive. ``before_commit``
+    (test/chaos hook) runs between (1) and (2); if it raises, the marker
+    still names the old generation. Returns ``(path, gen)``.
+    """
+    os.makedirs(cache_dir, exist_ok=True)
+    gens = _list_generations(cache_dir, name)
+    gen = (gens[-1] + 1) if gens else 0
+    path = save_session(sess, _gen_archive(cache_dir, name, gen))
+    if before_commit is not None:
+        before_commit()
+    marker = _marker_path(cache_dir, name)
+    tmp = f"{marker}.tmp-{os.getpid()}-{next(_TMP_COUNTER)}"
+    try:
+        with open(tmp, "w") as fh:
+            fh.write(f"{gen}\n")
+        os.replace(tmp, marker)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    # Journals of older generations are now superseded; the new lineage
+    # starts an empty journal against `gen`.
+    pat = re.compile(
+        rf"^{re.escape(_lineage_stem(name))}\.gen(\d+)\.delta\d+\.npz$"
+    )
+    try:
+        for fname in os.listdir(cache_dir):
+            m = pat.match(fname)
+            if m and int(m.group(1)) < gen:
+                try:
+                    os.remove(os.path.join(cache_dir, fname))
+                except OSError:
+                    pass
+    except OSError:
+        pass
+    return path, gen
+
+
+def load_last_good(
+    cache_dir: str, name: str, *, executor: Optional[str] = None, lazy: bool = True
+):
+    """Load the newest recoverable generation of lineage ``name``.
+
+    Follows the ``.lastgood`` marker first; if that archive is missing or
+    unreadable (partial disk loss), falls back to older on-disk
+    generations in descending order — never to one *newer* than the
+    marker, which may be a torn write-in-progress. Returns
+    ``(session, gen)`` or ``None`` when nothing is recoverable.
+    """
+    marked = last_good_generation(cache_dir, name)
+    candidates = [g for g in reversed(_list_generations(cache_dir, name))
+                  if marked is None or g <= marked]
+    if marked is not None and marked not in candidates:
+        pass  # marker's archive vanished; older gens below still count
+    for gen in candidates:
+        path = _gen_archive(cache_dir, name, gen)
+        try:
+            sess = load_session(path, executor=executor, lazy=lazy)
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+            continue
+        return sess, gen
+    return None
+
+
+def journal_delta(cache_dir: str, name: str, gen: int, delta: SparseDelta) -> str:
+    """Append ``delta`` to generation ``gen``'s journal (atomic write).
+
+    Journal entries are numbered ``.gen{gen}.delta{seq}.npz`` in apply
+    order; :func:`replay_journal` folds them back over the loaded
+    checkpoint. Returns the path written.
+    """
+    os.makedirs(cache_dir, exist_ok=True)
+    stem = _lineage_stem(name)
+    pat = re.compile(rf"^{re.escape(stem)}\.gen{gen:06d}\.delta(\d+)\.npz$")
+    seqs = [int(m.group(1)) for m in map(pat.match, os.listdir(cache_dir)) if m]
+    seq = (max(seqs) + 1) if seqs else 0
+    final = os.path.join(cache_dir, f"{stem}.gen{gen:06d}.delta{seq:06d}.npz")
+    meta = {"shape": list(delta.shape), "gen": int(gen), "seq": int(seq)}
+    tmp = f"{final}.tmp-{os.getpid()}-{next(_TMP_COUNTER)}"
+    try:
+        with open(tmp, "wb") as fh:
+            np.savez(
+                fh,
+                up_row=delta.up_row, up_col=delta.up_col, up_val=delta.up_val,
+                del_row=delta.del_row, del_col=delta.del_col,
+                **{"meta.json": np.array(json.dumps(meta))},
+            )
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return final
+
+
+def load_journal(cache_dir: str, name: str, gen: int) -> List[SparseDelta]:
+    """Generation ``gen``'s journaled deltas, in apply (seq) order."""
+    stem = _lineage_stem(name)
+    pat = re.compile(rf"^{re.escape(stem)}\.gen{gen:06d}\.delta(\d+)\.npz$")
+    try:
+        listing = os.listdir(cache_dir)
+    except OSError:
+        return []
+    found = sorted(
+        (int(m.group(1)), fname)
+        for m, fname in ((pat.match(f), f) for f in listing) if m
+    )
+    out = []
+    for _, fname in found:
+        with np.load(os.path.join(cache_dir, fname)) as z:
+            meta = json.loads(str(z["meta.json"]))
+            out.append(SparseDelta(
+                shape=tuple(meta["shape"]),
+                up_row=z["up_row"], up_col=z["up_col"], up_val=z["up_val"],
+                del_row=z["del_row"], del_col=z["del_col"],
+            ))
+    return out
+
+
+def replay_journal(sess: "SparseSession", cache_dir: str, name: str, gen: int):
+    """Fold generation ``gen``'s journal over ``sess`` via ``update()``.
+
+    Updates are deterministic, so the result is bitwise-identical to the
+    live session that produced the journal. Returns the final session
+    (``sess`` itself when the journal is empty).
+    """
+    for delta in load_journal(cache_dir, name, gen):
+        sess = sess.update(delta)
+    return sess
 
 
 def cached_distribute(

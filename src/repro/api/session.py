@@ -7,6 +7,7 @@ executor. See :mod:`repro.api` for the workflow overview.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
@@ -17,10 +18,117 @@ from repro.api.partitioners import PartitionResult, resolve_partitioner
 from repro.api.solvers import SOLVERS, STEPPERS, BatchStepper, SolveResult
 from repro.api.topology import Topology
 from repro.pmvc.dist import ExchangePlan, phase_costs
-from repro.pmvc.plan_device import DevicePlan, pack_units
+from repro.pmvc.plan_device import (
+    DevicePlan,
+    OverlapPlan,
+    build_overlap_plan,
+    pack_units,
+    patch_device_plan,
+)
+from repro.sparse.bell import x_block_owner
+from repro.sparse.delta import SparseDelta
 from repro.sparse.formats import COO
 
-__all__ = ["SparseSession", "distribute"]
+__all__ = ["SparseSession", "UpdateReport", "distribute"]
+
+# ---------------------------------------------------------------------------
+# Streaming-update policy (DESIGN.md §14).
+#
+# PATCH_TOUCH_LIMIT: if a delta touches more than this fraction of the plan's
+# real tiles, patching approaches the cost of a cold pack while inheriting a
+# stale partition — replan instead.
+# PATCH_DRIFT_LIMIT: patched plans keep the original partition; when the
+# phase-cost model says the patched plan's iteration time has drifted past
+# this factor of the baseline (the modeled t_iter when the partition was last
+# computed), the stale partition is no longer paying for itself — replan.
+# REPLAN_FM_KW: replans triggered by update() lighten the FM refinement
+# budget — the previous plan is already a good warm start for the cost model,
+# and update latency matters more than the last percent of cut quality.
+PATCH_TOUCH_LIMIT = 0.25
+PATCH_DRIFT_LIMIT = 1.25
+REPLAN_FM_KW = {"fm_passes": 2, "fm_kicks": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateReport:
+    """What :meth:`SparseSession.update` decided and why.
+
+    ``action`` is ``"patched"`` or ``"replanned"``; ``t_model_patched`` /
+    ``t_model_baseline`` are the §9/§13 modeled iteration times that fed the
+    drift rule (``None`` when the decision never reached the cost model)."""
+
+    action: str
+    reason: str
+    structural: bool
+    touched_tiles: int
+    total_tiles: int
+    t_model_patched: Optional[float] = None
+    t_model_baseline: Optional[float] = None
+
+    @property
+    def touched_fraction(self) -> float:
+        return self.touched_tiles / max(self.total_tiles, 1)
+
+
+def _inherit_units(
+    a: COO,
+    elem_unit: np.ndarray,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    *,
+    ncb: int,
+    bn: int,
+    num_units: int,
+) -> np.ndarray:
+    """Deterministic unit assignment for elements inserted by a delta.
+
+    Rule (documented in DESIGN.md §14): an inserted element at ``(r, c)``
+    inherits the unit of the nearest existing element in row ``r`` (by
+    ``|col - c|``, ties toward the smaller column); if row ``r`` is empty,
+    the nearest existing element in column ``c`` (by ``|row - r|``, ties
+    toward the smaller row); if both are empty, the x-ownership fallback
+    ``x_block_owner(ncb, U)[c // bn]``.  The rule is a pure function of the
+    old matrix + old assignment, so patched plans are reproducible and the
+    property suite can rebuild them cold."""
+    d = rows.shape[0]
+    out = np.full(d, -1, dtype=np.int64)
+    if d == 0:
+        return out
+
+    def nearest(sort_major, sort_minor, q_major, q_minor, stride):
+        """Unit of the nearest old element sharing ``major`` with the query
+        (minor-distance, ties toward the smaller minor); -1 if none."""
+        stride = np.int64(stride)
+        key = sort_major.astype(np.int64) * stride + sort_minor.astype(np.int64)
+        order = np.argsort(key)
+        ks, maj_s, min_s = key[order], sort_major[order], sort_minor[order]
+        us = elem_unit[order]
+        qk = q_major.astype(np.int64) * stride + q_minor.astype(np.int64)
+        p = np.searchsorted(ks, qk)
+        left = p - 1
+        right = np.minimum(p, ks.size - 1)
+        lok = (left >= 0) & (maj_s[np.maximum(left, 0)] == q_major)
+        rok = (p < ks.size) & (maj_s[right] == q_major)
+        ldist = np.where(lok, np.abs(min_s[np.maximum(left, 0)] - q_minor), 2**62)
+        rdist = np.where(rok, np.abs(min_s[right] - q_minor), 2**62)
+        # Ties toward the left neighbour == the smaller minor coordinate.
+        use_left = lok & (~rok | (ldist <= rdist))
+        unit = np.full(q_major.shape[0], -1, dtype=np.int64)
+        unit[use_left] = us[np.maximum(left, 0)][use_left]
+        use_right = ~use_left & rok
+        unit[use_right] = us[right][use_right]
+        return unit
+
+    n, m = a.shape
+    if a.nnz:
+        out = nearest(a.row, a.col, rows, cols, m)
+        miss = out < 0
+        if miss.any():
+            out[miss] = nearest(a.col, a.row, cols[miss], rows[miss], n)
+    miss = out < 0
+    if miss.any():
+        out[miss] = x_block_owner(ncb, num_units)[cols[miss] // bn]
+    return out
 
 
 class SparseSession:
@@ -408,6 +516,253 @@ class SparseSession:
             tile_transform=self.tile_transform,
         )
 
+    # -- streaming updates (DESIGN.md §14) ---------------------------------
+
+    def update(
+        self, delta: SparseDelta, *, force: Optional[str] = None
+    ) -> "SparseSession":
+        """Apply a sparse delta and return a new session for the mutated
+        matrix — patched in place when cheap, fully re-planned when not.
+
+        The patch path keeps the existing partition: surviving elements
+        keep their unit, inserted elements inherit one deterministically
+        (see :func:`_inherit_units`), only the touched tiles are
+        re-scattered (:func:`repro.pmvc.plan_device.patch_device_plan`),
+        and the exchange plan is rebuilt exactly as a cold
+        ``distribute()`` would from the patched packing — so a patched
+        session is bitwise-equal to the cold pipeline run on the same
+        assignment (and, for value-only deltas, to a cold
+        ``distribute()`` of the mutated matrix outright, since the
+        partitioners depend only on the sparsity pattern).
+
+        The decision is driven by the §9/§13 phase-cost model: replan if
+        the delta touches more than ``PATCH_TOUCH_LIMIT`` of the real
+        tiles, or if the patched plan's modeled iteration time drifts
+        past ``PATCH_DRIFT_LIMIT`` × the baseline recorded when the
+        partition was last computed (the baseline carries across chained
+        patches, so slow drift still triggers eventually). Replans run
+        ``distribute()`` with a lightened FM budget (``REPLAN_FM_KW``).
+
+        ``force="patch"`` / ``force="replan"`` override the rule. The
+        returned session carries an :class:`UpdateReport` as
+        ``update_report``. Value views (``with_value_map``) cannot be
+        updated — update the base session and re-derive the view.
+        """
+        if not isinstance(delta, SparseDelta):
+            raise TypeError(
+                f"update() takes a SparseDelta, got {type(delta).__name__}"
+            )
+        if force not in (None, "patch", "replan"):
+            raise ValueError(
+                f"force must be None, 'patch' or 'replan', got {force!r}"
+            )
+        if self.tile_transform is not None:
+            raise ValueError(
+                "update() on a value view (with_value_map) is ambiguous — "
+                "update the base session and re-derive the view"
+            )
+        a = self.matrix
+        mutated = delta.apply(a)  # validates; raises on bad deletes
+        dp = self.device_plan
+        part = self.partition
+        bm, bn = dp.bm, dp.bn
+        nrb, ncb = dp.num_row_blocks, dp.num_col_blocks
+        u_n = self.topology.units
+        elem_unit_old = np.asarray(part.elem_unit)
+
+        m64 = np.int64(a.shape[1])
+        akey = a.row.astype(np.int64) * m64 + a.col.astype(np.int64)
+        aorder = np.argsort(akey)
+        akey_s, aunit_s = akey[aorder], elem_unit_old[aorder]
+
+        def unit_of_existing(keys):
+            if akey_s.size == 0 or keys.size == 0:
+                return np.full(keys.shape, -1, np.int64), np.zeros(keys.shape, bool)
+            p = np.minimum(np.searchsorted(akey_s, keys), akey_s.size - 1)
+            found = akey_s[p] == keys
+            return np.where(found, aunit_s[p], -1), found
+
+        upkey, delkey = delta._keys()
+        del_units, _ = unit_of_existing(delkey)  # all exist (apply validated)
+        up_units, up_found = unit_of_existing(upkey)
+        fresh = ~up_found
+        if fresh.any():
+            up_units = up_units.copy()
+            up_units[fresh] = _inherit_units(
+                a,
+                elem_unit_old,
+                delta.up_row[fresh],
+                delta.up_col[fresh],
+                ncb=ncb,
+                bn=bn,
+                num_units=u_n,
+            )
+        structural = bool(delta.num_deletes) or bool(fresh.any())
+
+        def tile_key(rows, cols, units):
+            return (
+                units.astype(np.int64) * nrb + (rows // bm).astype(np.int64)
+            ) * ncb + (cols // bn).astype(np.int64)
+
+        touched = np.unique(
+            np.concatenate(
+                [
+                    tile_key(delta.del_row, delta.del_col, del_units),
+                    tile_key(delta.up_row, delta.up_col, up_units),
+                ]
+            )
+        )
+        total = int(dp.real_tiles.sum())
+        frac = touched.size / max(total, 1)
+
+        # The mutated matrix's element→unit map: survivors keep their old
+        # unit, inserts carry the inherited one.
+        munit = np.empty(mutated.nnz, dtype=elem_unit_old.dtype)
+        mkey = mutated.row.astype(np.int64) * m64 + mutated.col.astype(np.int64)
+        old_u, old_found = unit_of_existing(mkey)
+        munit[old_found] = old_u[old_found]
+        miss = ~old_found
+        if miss.any():
+            nk = upkey[fresh]
+            norder = np.argsort(nk)
+            q = np.searchsorted(nk[norder], mkey[miss])
+            munit[miss] = up_units[fresh][norder][q]
+
+        replan_reason = None
+        t_patched = t_baseline = None
+        dp_new = sp_new = None
+        if force == "replan":
+            replan_reason = "forced"
+        elif force != "patch" and frac > PATCH_TOUCH_LIMIT:
+            replan_reason = (
+                f"delta touches {touched.size}/{total} tiles "
+                f"({frac:.1%} > PATCH_TOUCH_LIMIT {PATCH_TOUCH_LIMIT:.0%})"
+            )
+        if replan_reason is None:
+            dp_new = patch_device_plan(dp, mutated, munit, touched)
+            sp_old = self.selective
+            if structural:
+                # Structure changed: rebuild the exchange plan exactly as a
+                # cold distribute() would from the patched packing.
+                sp_new = resolve_exchange(self.exchange)(dp_new)
+            elif isinstance(sp_old, OverlapPlan):
+                # Values only: the selective sub-plan is a pure function of
+                # tile structure — share it; rebuild just the value-carrying
+                # local/halo payload split.
+                sp_new = build_overlap_plan(
+                    dp_new, sp_old.selective, waves=sp_old.waves
+                )
+            else:
+                sp_new = sp_old  # replicated / selective: structure-only
+            tkey = (
+                "t_iter_overlap"
+                if isinstance(sp_new, OverlapPlan)
+                else "t_iter_blocking"
+            )
+            t_baseline = getattr(self, "_t_iter_model", None)
+            if t_baseline is None:
+                t_baseline = phase_costs(dp, sp_old)[tkey]
+            t_patched = phase_costs(dp_new, sp_new)[tkey]
+            if force != "patch" and t_patched > PATCH_DRIFT_LIMIT * t_baseline:
+                replan_reason = (
+                    f"modeled t_iter {t_patched:.3e}s drifted past "
+                    f"{PATCH_DRIFT_LIMIT}x baseline {t_baseline:.3e}s"
+                )
+        if replan_reason is not None:
+            return self._replan(
+                mutated,
+                replan_reason,
+                structural=structural,
+                touched_tiles=int(touched.size),
+                total_tiles=total,
+                t_patched=t_patched,
+                t_baseline=t_baseline,
+            )
+
+        part_new = PartitionResult(
+            name=part.name, topology=self.topology, elem_unit=munit
+        )
+        sess = SparseSession(
+            mutated,
+            self.topology,
+            part_new,
+            dp_new,
+            exchange=self.exchange,
+            selective=sp_new,
+            executor=self.executor,
+        )
+        sess._t_iter_model = t_baseline  # drift accumulates across patches
+        cfg = getattr(self, "_plan_config", None)
+        if cfg is not None:
+            sess._plan_config = cfg
+        sess.update_report = UpdateReport(
+            action="patched",
+            reason="within patch budget",
+            structural=structural,
+            touched_tiles=int(touched.size),
+            total_tiles=total,
+            t_model_patched=t_patched,
+            t_model_baseline=t_baseline,
+        )
+        return sess
+
+    def _replan(
+        self,
+        mutated: COO,
+        reason: str,
+        *,
+        structural: bool,
+        touched_tiles: int,
+        total_tiles: int,
+        t_patched: Optional[float],
+        t_baseline: Optional[float],
+    ) -> "SparseSession":
+        """Full re-plan of ``mutated`` with a lightened FM budget, reusing
+        the planning configuration recorded by :func:`distribute` (falling
+        back to parsing the partition name for loaded sessions)."""
+        cfg = getattr(self, "_plan_config", None)
+        if cfg is None:
+            name = self.partition.name
+            if ":" in name:
+                method, dim = name.split(":", 1)
+                cfg = {"combo": method, "seed": 0, "partitioner_kw": {"dim": dim}}
+            else:
+                cfg = {"combo": name, "seed": 0, "partitioner_kw": {}}
+        kw = dict(cfg.get("partitioner_kw") or {})
+        light = dict(kw)
+        for k, v in REPLAN_FM_KW.items():
+            light.setdefault(k, v)
+        dp = self.device_plan
+        common = dict(
+            topology=self.topology,
+            combo=cfg["combo"],
+            exchange=self.exchange,
+            executor=self.executor,
+            block=(dp.bm, dp.bn),
+            seed=cfg.get("seed", 0),
+        )
+        try:
+            sess = distribute(mutated, **common, **light)
+        except TypeError:
+            # Custom partitioner predating the fm_* kwargs: full budget.
+            sess = distribute(mutated, **common, **kw)
+        tkey = (
+            "t_iter_overlap"
+            if isinstance(sess.selective, OverlapPlan)
+            else "t_iter_blocking"
+        )
+        sess._t_iter_model = phase_costs(sess.device_plan, sess.selective)[tkey]
+        sess.update_report = UpdateReport(
+            action="replanned",
+            reason=reason,
+            structural=structural,
+            touched_tiles=touched_tiles,
+            total_tiles=total_tiles,
+            t_model_patched=t_patched,
+            t_model_baseline=t_baseline,
+        )
+        return sess
+
     def __repr__(self) -> str:
         # repr must not force a lazily loaded plan's payload from disk.
         combo = "<lazy>" if callable(self._partition) else self.combo
@@ -478,16 +833,19 @@ def distribute(
     lw = kw.pop("locality_weight", None)
     if lw is None:
         lw = "auto" if exchange.split(":", 1)[0] == "overlap" else 0.0
+    # The planning configuration, normalized — cached under this key, and
+    # recorded on the session so update() can replan with the same recipe.
+    cfg_kw = dict(kw)
+    if lw == "auto":
+        cfg_kw["locality_weight"] = "auto"
+    elif float(lw) != 0.0:
+        cfg_kw["locality_weight"] = float(lw)
+        cfg_kw.setdefault("locality_bn", bn)
+    plan_config = {"combo": combo, "seed": seed, "partitioner_kw": cfg_kw}
     if cache_dir is not None:
         from repro.api.plancache import cached_distribute
 
-        ckw = dict(kw)
-        if lw == "auto":
-            ckw["locality_weight"] = "auto"
-        elif float(lw) != 0.0:
-            ckw["locality_weight"] = float(lw)
-            ckw.setdefault("locality_bn", bn)
-        return cached_distribute(
+        sess = cached_distribute(
             a,
             topology=topology,
             combo=combo,
@@ -497,8 +855,10 @@ def distribute(
             seed=seed,
             cache_dir=cache_dir,
             cache_budget_bytes=cache_budget_bytes,
-            partitioner_kw=ckw or None,
+            partitioner_kw=cfg_kw or None,
         )
+        sess._plan_config = plan_config
+        return sess
     if cache_budget_bytes is not None:
         raise ValueError("cache_budget_bytes requires cache_dir")
     if lw == "auto":
@@ -512,7 +872,7 @@ def distribute(
         part = resolve_partitioner(combo)(a, topology, seed=seed, **kw)
         dp = pack_units(a, part.elem_unit, topology.units, bm, bn)
         sp = resolve_exchange(exchange)(dp)
-    return SparseSession(
+    sess = SparseSession(
         a,
         topology,
         part,
@@ -521,6 +881,8 @@ def distribute(
         selective=sp,
         executor=executor,
     )
+    sess._plan_config = plan_config
+    return sess
 
 
 # Candidate locality weights the overlap auto-tuner plans at — 0.0 (the

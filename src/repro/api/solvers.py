@@ -570,6 +570,26 @@ class BatchStepper:
     def extract(self, slot: int) -> np.ndarray:
         raise NotImplementedError
 
+    # -- state capture (serving fault tolerance) ---------------------------
+    # Stepper state is numpy by contract (the np.where freezing that makes
+    # slot trajectories bitwise-stable), so the mutable per-slot state is
+    # exactly the set of ndarray attributes. Capturing them generically
+    # means every registered stepper — including user registrations — is
+    # snapshot/restorable without opting in.
+
+    def snapshot(self) -> dict:
+        """Deep copy of every ndarray attribute — the per-slot solver
+        state. Restoring it onto a fresh stepper built for the same
+        (session, slots, config) resumes the iteration bitwise."""
+        return {
+            k: v.copy() for k, v in vars(self).items() if isinstance(v, np.ndarray)
+        }
+
+    def restore(self, state: dict) -> None:
+        """Install a :meth:`snapshot` (copied — the snapshot stays valid)."""
+        for k, v in state.items():
+            setattr(self, k, v.copy())
+
 
 class _PagerankStepper(BatchStepper):
     """Slot-batched personalized PageRank — the multi-user serving path.

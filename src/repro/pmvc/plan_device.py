@@ -26,7 +26,12 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from repro.sparse.bell import split_tiles_local_halo, stack_ragged, x_block_owner
+from repro.sparse.bell import (
+    repad_stacked,
+    split_tiles_local_halo,
+    stack_ragged,
+    x_block_owner,
+)
 from repro.sparse.formats import COO
 
 __all__ = [
@@ -35,6 +40,7 @@ __all__ = [
     "OverlapPlan",
     "ExchangePlan",
     "pack_units",
+    "patch_device_plan",
     "build_selective_plan",
     "build_overlap_plan",
     "tile_col_local_from",
@@ -429,6 +435,118 @@ def pack_units(
         tile_row=tile_row,
         tile_col=tile_col,
         real_tiles=counts.astype(np.int64),
+    )
+
+
+def patch_device_plan(
+    plan: DevicePlan,
+    a: COO,
+    elem_unit: np.ndarray,
+    touched_keys: np.ndarray,
+) -> DevicePlan:
+    """Incrementally rebuild a :class:`DevicePlan` after a sparse delta.
+
+    ``a`` is the **mutated** matrix, ``elem_unit`` its per-element unit
+    assignment (old elements keep their old unit; inserted elements carry an
+    inherited unit), and ``touched_keys`` the ascending-unique set of
+    ``(unit, block-row, block-col)`` composite tile keys
+    (``(unit*nrb + rb)*ncb + cb``, int64) whose contents may have changed.
+
+    The contract is bitwise equality with the cold path: the result is
+    identical, array for array, to ``pack_units(a, elem_unit, ...)`` — same
+    ascending per-unit tile order, same zero padding, same ``t_max`` rule —
+    but only touched tiles are re-scattered; untouched per-unit payload runs
+    are block-copied from the old plan.  Cost is O(touched elements) for the
+    scatter plus O(total tiles) for the copy, versus O(nnz log nnz) for a
+    cold pack (and, upstream, the partitioner the caller skipped).
+    """
+    nrb, ncb = plan.num_row_blocks, plan.num_col_blocks
+    bm, bn, u_n = plan.bm, plan.bn, plan.num_units
+    touched = np.asarray(touched_keys, dtype=np.int64)
+    if touched.size == 0:
+        return plan
+
+    # Mutated elements that land in a touched tile (unchanged elements in a
+    # touched tile still participate: the whole tile is re-scattered).
+    ekey = (
+        elem_unit.astype(np.int64) * nrb + (a.row // bm).astype(np.int64)
+    ) * ncb + (a.col // bn).astype(np.int64)
+    pos = np.searchsorted(touched, ekey)
+    in_touched = touched[np.minimum(pos, touched.size - 1)] == ekey
+    sel = np.nonzero(in_touched)[0]
+
+    # Fresh payloads for touched tiles that still hold at least one element
+    # (a delete can empty a tile, which then simply disappears).
+    fresh_keys = np.unique(ekey[sel])
+    fresh_tiles = np.zeros((fresh_keys.shape[0], bm, bn), dtype=np.float32)
+    if sel.size:
+        fidx = np.searchsorted(fresh_keys, ekey[sel])
+        fresh_tiles[fidx, a.row[sel] % bm, a.col[sel] % bn] = a.val[sel].astype(
+            np.float32
+        )
+
+    # Per touched unit: merge the surviving old keys with the fresh touched
+    # keys, preserving the ascending composite order pack_units guarantees.
+    t_unit = touched // (nrb * ncb)
+    touched_units = np.unique(t_unit)
+    counts = plan.real_tiles.astype(np.int64).copy()
+    per_unit = {}
+    for u in touched_units:
+        k = int(plan.real_tiles[u])
+        old_keys = (
+            np.int64(u) * nrb + plan.tile_row[u, :k].astype(np.int64)
+        ) * ncb + plan.tile_col[u, :k].astype(np.int64)
+        tu = touched[t_unit == u]
+        if k:
+            p = np.minimum(np.searchsorted(tu, old_keys), tu.size - 1)
+            old_is_touched = tu[p] == old_keys
+        else:
+            old_is_touched = np.zeros(0, dtype=bool)
+        keep_idx = np.nonzero(~old_is_touched)[0]
+        if fresh_keys.size:
+            q = np.minimum(np.searchsorted(fresh_keys, tu), fresh_keys.size - 1)
+            present = fresh_keys[q] == tu
+        else:
+            present = np.zeros(tu.shape[0], dtype=bool)
+        tu_live = tu[present]
+        merged = np.concatenate([old_keys[keep_idx], tu_live])
+        order = np.argsort(merged)
+        is_fresh = np.concatenate(
+            [np.zeros(keep_idx.size, bool), np.ones(tu_live.size, bool)]
+        )[order]
+        src = np.concatenate(
+            [keep_idx, np.searchsorted(fresh_keys, tu_live)]
+        )[order]
+        per_unit[int(u)] = (merged[order], is_fresh, src)
+        counts[u] = merged.shape[0]
+
+    # Untouched units keep their payload runs verbatim (vectorized re-pad to
+    # the new capacity, zero padding restored); touched units are rebuilt.
+    t_max = max(int(counts.max(initial=0)), 1)
+    tiles = repad_stacked(plan.tiles, plan.real_tiles, t_max)
+    tile_row = repad_stacked(plan.tile_row, plan.real_tiles, t_max)
+    tile_col = repad_stacked(plan.tile_col, plan.real_tiles, t_max)
+    for u, (keys, is_fresh, src) in per_unit.items():
+        tiles[u] = 0.0
+        tile_row[u] = 0
+        tile_col[u] = 0
+        k = keys.shape[0]
+        if k:
+            payload = np.empty((k, bm, bn), dtype=np.float32)
+            payload[~is_fresh] = plan.tiles[u, src[~is_fresh]]
+            payload[is_fresh] = fresh_tiles[src[is_fresh]]
+            tiles[u, :k] = payload
+            tile_row[u, :k] = ((keys // ncb) % nrb).astype(tile_row.dtype)
+            tile_col[u, :k] = (keys % ncb).astype(tile_col.dtype)
+    return DevicePlan(
+        shape=a.shape,
+        bm=bm,
+        bn=bn,
+        num_units=u_n,
+        tiles=tiles,
+        tile_row=tile_row,
+        tile_col=tile_col,
+        real_tiles=counts,
     )
 
 

@@ -38,21 +38,62 @@ when a graph is registered by path, so the warm pool of materialized
 plans is bounded by :func:`repro.api.set_memo_limit` — a cold tenant's
 graph is evicted LRU and transparently re-hydrated from disk on its
 next request.
+
+**Streaming updates.** :meth:`SparseServeEngine.update_graph` applies a
+:class:`repro.sparse.delta.SparseDelta` to a registered graph through
+``SparseSession.update`` (patch-or-replan, DESIGN.md §14). Swap
+semantics are snapshot-isolated: lanes already running keep the session
+they were built on until they drain; only *new* lanes see the mutated
+graph. With a ``recovery_dir`` the delta is journaled against the
+graph's last committed generation (checkpointing one first when none
+exists), so a crash replays exactly the live update chain.
+
+**Fault tolerance.** Wire in the :mod:`repro.runtime.fault` scaffolding
+and the engine survives unit loss mid-anything: a ``fault_injector``
+raises :class:`~repro.runtime.fault.WorkerFailure` at scheduled kill
+points (inside ``step``, ``update_graph``, and — via
+``save_generation``'s ``before_commit`` — mid-checkpoint); every
+guarded body runs against a snapshot of all mutable scheduler state
+(stepper arrays, slot occupancy, ticket lifecycle fields, queue order,
+metrics), so recovery = restore snapshot → reload each laned graph from
+its last good generation + journal → remap the plan's per-unit shards
+onto the survivor mesh (:func:`repro.runtime.elastic.elastic_restart`)
+→ rebind steppers with their saved state → rerun the body. Steppers
+are deterministic, so the recovered trajectory is bitwise the
+uninterrupted one — no ticket is lost, duplicated, or double-counted.
+A ``heartbeat`` detects units that die *between* ticks, and a
+``latency_probe`` + per-unit :class:`~repro.runtime.fault.StragglerMonitor`
+demotes persistently slow units through the same recovery path.
 """
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import enum
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.api.plancache import hydrate_session
-from repro.api.session import SparseSession
+from repro.api.plancache import (
+    hydrate_session,
+    journal_delta,
+    last_good_generation,
+    load_last_good,
+    replay_journal,
+    save_generation,
+)
+from repro.api.session import SparseSession, UpdateReport
 from repro.api.solvers import STEPPERS, BatchStepper, SolveResult
+from repro.runtime.fault import (
+    FaultInjector,
+    Heartbeat,
+    StragglerMonitor,
+    WorkerFailure,
+)
 from repro.serve.metrics import ServeMetrics
+from repro.sparse.delta import SparseDelta
 
 __all__ = ["QueueFullError", "SparseServeEngine", "Status", "Ticket"]
 
@@ -158,6 +199,18 @@ class SparseServeEngine:
     :meth:`run_until_drained` ticks until no work remains. A driver
     thread or async loop owns the cadence; the engine itself never
     blocks.
+
+    Fault-tolerance wiring (all optional, zero overhead when absent):
+    ``fault_injector`` schedules :class:`WorkerFailure` at engine fault
+    points (a global counter ticks at each one — see :meth:`_fault_tick`
+    for the ordering); ``heartbeat`` detects units dead between ticks;
+    ``recovery_dir`` enables generation checkpoints + delta journaling
+    (:meth:`checkpoint_graph`, :meth:`update_graph`) and makes recovery
+    reload from disk instead of the live session; ``latency_probe``
+    (``() -> {unit: latency}``) feeds per-unit straggler monitors —
+    ``straggler_patience`` consecutive flags demote the unit through
+    the unit-loss path. ``max_recoveries`` bounds recovery attempts per
+    guarded call so a hard-wedged cluster fails loudly.
     """
 
     def __init__(
@@ -169,6 +222,13 @@ class SparseServeEngine:
         default_tol: float = 0.0,
         executor: Optional[str] = None,
         clock=time.monotonic,
+        fault_injector: Optional[FaultInjector] = None,
+        heartbeat: Optional[Heartbeat] = None,
+        recovery_dir: Optional[str] = None,
+        latency_probe: Optional[Callable[[], Dict[int, float]]] = None,
+        straggler_factor: float = 3.0,
+        straggler_patience: int = 3,
+        max_recoveries: int = 8,
     ):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
@@ -185,6 +245,23 @@ class SparseServeEngine:
         self._queue: "collections.deque[Ticket]" = collections.deque()
         self._lanes: Dict[Tuple, _Lane] = {}
         self._next_tid = 0
+        # -- fault tolerance state
+        self.fault_injector = fault_injector
+        self.heartbeat = heartbeat
+        self.recovery_dir = recovery_dir
+        self.latency_probe = latency_probe
+        self.straggler_patience = int(straggler_patience)
+        self.max_recoveries = int(max_recoveries)
+        self.dead_units: set = set()
+        self.recoveries = 0
+        self._fault_steps = 0
+        self._silent_units: set = set()
+        self._graph_gens: Dict[str, int] = {}
+        self._straggler_monitors: Dict[int, StragglerMonitor] = (
+            collections.defaultdict(lambda: StragglerMonitor(factor=straggler_factor))
+        )
+        self._straggler_strikes: Dict[int, int] = collections.defaultdict(int)
+        self._probe_count = 0
 
     # -- registration ------------------------------------------------------
 
@@ -213,6 +290,278 @@ class SparseServeEngine:
         if self.executor is not None and src.executor != self.executor:
             return src.with_executor(self.executor)
         return src
+
+    # -- streaming updates + checkpoints -----------------------------------
+
+    def update_graph(self, name: str, delta: SparseDelta, *, force=None) -> UpdateReport:
+        """Apply ``delta`` to registered graph ``name`` in place.
+
+        Runs :meth:`SparseSession.update` (patch-or-replan), journals the
+        delta against the graph's committed generation when the engine
+        has a ``recovery_dir`` (checkpointing a base generation first if
+        none exists yet), then swaps the registered source to the
+        mutated session. Lanes already running keep their old session
+        until they drain — snapshot isolation, so an in-flight solve is
+        never answered half against each matrix. Returns the update's
+        :class:`~repro.api.session.UpdateReport`.
+
+        Fault points: one before the update is computed, one after it
+        but before any side effect — a kill at either leaves the engine
+        unchanged, recovery reruns the whole method.
+        """
+        if name not in self._graphs:
+            known = ", ".join(sorted(self._graphs)) or "<none>"
+            raise KeyError(f"unknown graph {name!r}; registered: {known}")
+
+        def body():
+            sess = self._session(name)
+            self._fault_tick()  # kill point: before the update
+            new = sess.update(delta, force=force)
+            self._fault_tick()  # kill point: computed, nothing swapped yet
+            # All side effects live below the last fault point, so a
+            # recovery rerun can never journal or swap twice.
+            if self.recovery_dir is not None:
+                gen = self._graph_gens.get(name)
+                if gen is None:
+                    gen = last_good_generation(self.recovery_dir, name)
+                if gen is None:
+                    _, gen = save_generation(sess, self.recovery_dir, name)
+                self._graph_gens[name] = gen
+                journal_delta(self.recovery_dir, name, gen, delta)
+            self._graphs[name] = new
+            return new.update_report
+
+        return self._guard(body)
+
+    def checkpoint_graph(self, name: str) -> int:
+        """Commit graph ``name``'s current plan as a new generation.
+
+        Requires ``recovery_dir``. The commit is crash-safe end to end
+        (:func:`repro.api.plancache.save_generation`): the last-good
+        marker advances only after the archive is complete, and this
+        engine's mid-checkpoint fault point fires *between* archive
+        write and marker advance — the worst possible moment — leaving
+        the previous generation committed. Returns the generation
+        number.
+        """
+        if self.recovery_dir is None:
+            raise RuntimeError("checkpoint_graph requires recovery_dir")
+        if name not in self._graphs:
+            known = ", ".join(sorted(self._graphs)) or "<none>"
+            raise KeyError(f"unknown graph {name!r}; registered: {known}")
+
+        def body():
+            sess = self._session(name)
+            self._fault_tick()  # kill point: before the archive write
+            _, gen = save_generation(
+                sess, self.recovery_dir, name, before_commit=self._fault_tick
+            )
+            self._graph_gens[name] = gen
+            return gen
+
+        return self._guard(body)
+
+    # -- fault handling ----------------------------------------------------
+
+    def mark_unit_silent(self, unit: int) -> None:
+        """Test hook: stop beating ``unit``'s heartbeat so it times out
+        and is declared dead at a later tick."""
+        self._silent_units.add(int(unit))
+
+    def _fault_tick(self) -> None:
+        """One engine fault point. The injector's schedule is keyed on a
+        global counter over *all* fault points the engine passes, in
+        deterministic order: for each ``step()`` tick, one after refill
+        then one after each lane's batched iteration (demand order); in
+        ``update_graph``, before and after computing the update; in
+        ``checkpoint_graph``, before the archive write and between the
+        write and the marker commit."""
+        self._fault_steps += 1
+        if self.fault_injector is not None:
+            self.fault_injector.check(self._fault_steps - 1)
+
+    def _guard(self, body):
+        """Run ``body`` with unit-loss recovery: snapshot all mutable
+        scheduler state, and on :class:`WorkerFailure` restore it,
+        recover the lost unit, and rerun. Free when no injector is
+        wired (heartbeat-detected deaths happen *between* ticks and
+        need no rollback)."""
+        if self.fault_injector is None:
+            return body()
+        for _ in range(self.max_recoveries + 1):
+            snap = self._snapshot()
+            try:
+                return body()
+            except WorkerFailure as failure:
+                self._restore(snap)
+                self._recover_unit_loss(failure.worker)
+        raise RuntimeError(
+            f"gave up after {self.max_recoveries} recoveries in one call"
+        )
+
+    def _snapshot(self) -> dict:
+        """Capture every piece of state a guarded body may mutate.
+
+        Tickets are captured by identity (they are mutable dataclasses
+        shared between the queue, lanes, and callers' hands — callers
+        must observe the rolled-back lifecycle, so we restore fields in
+        place rather than swap objects)."""
+        tickets: Dict[int, tuple] = {}
+
+        def cap(t: Optional[Ticket]) -> None:
+            if t is not None and id(t) not in tickets:
+                tickets[id(t)] = (
+                    t, t.status, t.result, t.error, t.t_start, t.t_finish
+                )
+
+        lanes = {}
+        for key, lane in self._lanes.items():
+            for t in lane.tickets:
+                cap(t)
+            lanes[key] = (
+                lane,
+                lane.stepper.snapshot(),
+                list(lane.tickets),
+                lane.active.copy(),
+                lane.iters_done.copy(),
+                lane.budget.copy(),
+                [list(r) for r in lane.residuals],
+            )
+        for t in self._queue:
+            cap(t)
+        return {
+            "queue": list(self._queue),
+            "tickets": tickets,
+            "lanes": lanes,
+            "metrics": copy.deepcopy(self.metrics),
+            "next_tid": self._next_tid,
+        }
+
+    def _restore(self, snap: dict) -> None:
+        self._queue = collections.deque(snap["queue"])
+        for t, status, result, error, t_start, t_finish in snap["tickets"].values():
+            t.status = status
+            t.result = result
+            t.error = error
+            t.t_start = t_start
+            t.t_finish = t_finish
+        self._lanes = {}
+        for key, (lane, state, tickets, active, iters, budget, residuals) in snap[
+            "lanes"
+        ].items():
+            lane.stepper.restore(state)
+            lane.tickets = list(tickets)
+            lane.active = active.copy()
+            lane.iters_done = iters.copy()
+            lane.budget = budget.copy()
+            lane.residuals = [list(r) for r in residuals]
+            self._lanes[key] = lane
+        self.metrics = snap["metrics"]
+        self._next_tid = snap["next_tid"]
+
+    def _recovered_session(self, name: str) -> SparseSession:
+        """The session recovery rebuilds lanes from: last good archive +
+        journal replay when this engine persists generations (replay is
+        deterministic, so it reproduces the live update chain bitwise),
+        else the live registered session."""
+        if self.recovery_dir is not None:
+            got = load_last_good(self.recovery_dir, name, executor=self.executor)
+            if got is not None:
+                sess, gen = got
+                return replay_journal(sess, self.recovery_dir, name, gen)
+        return self._session(name)
+
+    def _remap_onto_survivors(self, sess: SparseSession) -> SparseSession:
+        """Re-place the plan's per-unit shard arrays on a mesh sized to
+        the surviving units via the elastic runtime
+        (:func:`make_mesh_any` → :func:`elastic_restart`). The logical
+        plan is mesh-agnostic, so the round trip is value-preserving —
+        results after recovery stay bitwise — while exercising the real
+        device-placement path a multi-host deployment would take."""
+        if not self.dead_units:
+            return sess
+        # Deferred: repro.runtime.elastic imports jax at module scope;
+        # engines that never recover shouldn't pay for it.
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.elastic import elastic_restart, make_mesh_any
+
+        dp = sess.device_plan
+        survivors = max(1, sess.topology.units - len(self.dead_units))
+        mesh = make_mesh_any((min(survivors, len(jax.devices())),), ("units",))
+        tree = {"tiles": dp.tiles, "tile_row": dp.tile_row, "tile_col": dp.tile_col}
+
+        class _TreeRestore:
+            def restore(self, template, step):
+                return tree, 0
+
+        placed, _ = elastic_restart(_TreeRestore(), None, mesh, lambda key, leaf: P())
+        dp2 = dataclasses.replace(
+            dp,
+            tiles=np.asarray(placed["tiles"]),
+            tile_row=np.asarray(placed["tile_row"]),
+            tile_col=np.asarray(placed["tile_col"]),
+        )
+        out = SparseSession(
+            sess.matrix,
+            sess.topology,
+            sess.partition,
+            dp2,
+            exchange=sess.exchange,
+            selective=sess._selective,
+            executor=sess.executor,
+            tile_transform=sess.tile_transform,
+        )
+        for attr in ("_plan_config", "_t_iter_model"):
+            if hasattr(sess, attr):
+                setattr(out, attr, getattr(sess, attr))
+        return out
+
+    def _recover_unit_loss(self, unit: int) -> None:
+        """Unit ``unit`` is gone: reload every laned graph from its last
+        good state, remap onto the survivors, and rebind each lane's
+        stepper around the recovered session with its in-flight state
+        intact (generic numpy snapshot/restore — the stepper contract)."""
+        self.dead_units.add(int(unit))
+        recovered: Dict[str, SparseSession] = {}
+        for key, lane in self._lanes.items():
+            graph, solver, config = key
+            if graph not in recovered:
+                recovered[graph] = self._remap_onto_survivors(
+                    self._recovered_session(graph)
+                )
+            sess = recovered[graph]
+            state = lane.stepper.snapshot()
+            stepper = STEPPERS.get(solver)(sess, self.batch_slots, **dict(config))
+            stepper.restore(state)
+            lane.stepper = stepper
+        # Future lanes plan against the recovered session too.
+        for graph, sess in recovered.items():
+            self._graphs[graph] = sess
+        self.recoveries += 1
+
+    def _probe_stragglers(self) -> None:
+        """Feed the per-unit straggler monitors one latency sample per
+        live unit; ``straggler_patience`` consecutive flags demote the
+        unit through the unit-loss recovery path (its shards move to
+        the survivors, its monitor stops being consulted)."""
+        if self.latency_probe is None:
+            return
+        sample = self.latency_probe()
+        self._probe_count += 1
+        demote = []
+        for unit, latency in sorted(sample.items()):
+            if unit in self.dead_units:
+                continue
+            if self._straggler_monitors[unit].observe(self._probe_count, latency):
+                self._straggler_strikes[unit] += 1
+                if self._straggler_strikes[unit] >= self.straggler_patience:
+                    demote.append(unit)
+            else:
+                self._straggler_strikes[unit] = 0
+        for unit in demote:
+            self._recover_unit_loss(unit)
 
     # -- admission ---------------------------------------------------------
 
@@ -348,6 +697,32 @@ class SparseServeEngine:
         — ``False`` means idle (empty queue, empty lanes), mirroring
         the LM engine's no-op step.
 
+        Fault-tolerant engines do three more things per tick: units the
+        heartbeat declared dead since the last tick are recovered up
+        front (between-tick loss mutates nothing mid-flight, so no
+        rollback is needed); the tick body runs under :meth:`_guard`
+        (mid-tick :class:`WorkerFailure` → restore + recover + rerun,
+        bitwise-identical because steppers are deterministic); and
+        afterwards the straggler probe may demote a persistently slow
+        unit. Surviving units then heartbeat."""
+        if self.heartbeat is not None:
+            # Live units check in first (a long gap between ticks must
+            # not read as fleet-wide death); only units that stopped
+            # reporting — killed or marked silent — stay stale and trip
+            # the timeout.
+            for unit in self.heartbeat.last_seen:
+                if unit not in self.dead_units and unit not in self._silent_units:
+                    self.heartbeat.beat(unit)
+            for unit in self.heartbeat.dead_workers():
+                if unit not in self.dead_units:
+                    self._recover_unit_loss(unit)
+        worked = self._guard(self._step_inner)
+        self._probe_stragglers()
+        return worked
+
+    def _step_inner(self) -> bool:
+        """The tick body (see :meth:`step` for scheduling semantics).
+
         Lanes step in **demand order** — occupied slots plus tickets
         still queued for the lane, busiest first (ties keep lane
         creation order; the sort is stable). Within one tick every lane
@@ -356,6 +731,7 @@ class SparseServeEngine:
         drift and their slots free up first for the next refill."""
         now = self.clock()
         self._refill(now)
+        self._fault_tick()  # kill point: slots loaded, nothing stepped
         worked = bool(self._lanes)
         queued = collections.Counter(t.lane_key for t in self._queue)
         order = sorted(
@@ -373,6 +749,7 @@ class SparseServeEngine:
                 continue
             active = lane.active.copy()
             res = lane.stepper.step(active)
+            self._fault_tick()  # kill point: mid-tick, one lane advanced
             self.metrics.lane_steps += 1
             self.metrics.slot_iters += int(active.sum())
             after = self.clock()

@@ -1,3 +1,4 @@
+from repro.sparse.delta import SparseDelta
 from repro.sparse.formats import COO, CSR, CSC, coo_from_dense, csr_from_coo, csc_from_coo, dense_from_coo
 from repro.sparse.generate import PAPER_SUITE, MatrixSpec, generate, generate_suite
 from repro.sparse.bell import BellMatrix, BellShard, pack_bell, tile_counts
@@ -5,5 +6,5 @@ from repro.sparse.bell import BellMatrix, BellShard, pack_bell, tile_counts
 __all__ = [
     "COO", "CSR", "CSC", "coo_from_dense", "csr_from_coo", "csc_from_coo",
     "dense_from_coo", "PAPER_SUITE", "MatrixSpec", "generate", "generate_suite",
-    "BellMatrix", "BellShard", "pack_bell", "tile_counts",
+    "BellMatrix", "BellShard", "pack_bell", "tile_counts", "SparseDelta",
 ]

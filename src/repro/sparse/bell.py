@@ -33,6 +33,7 @@ __all__ = [
     "split_tiles_local_halo",
     "stack_ragged",
     "ragged_from_stacked",
+    "repad_stacked",
     "x_block_owner",
 ]
 
@@ -83,6 +84,23 @@ def ragged_from_stacked(stacked: np.ndarray, counts: np.ndarray) -> np.ndarray:
     counts = np.asarray(counts, dtype=np.int64)
     mask = np.arange(stacked.shape[1], dtype=np.int64)[None, :] < counts[:, None]
     return stacked[mask]
+
+
+def repad_stacked(
+    stacked: np.ndarray, counts: np.ndarray, t: int
+) -> np.ndarray:
+    """Re-pad a ``[U, T, ...]`` stacked-ragged array to a new capacity ``t``
+    with zeroed padding: row ``u`` keeps its first ``min(counts[u], t)``
+    entries in order; everything past that is zero.  The growth/shrink
+    primitive behind :func:`repro.pmvc.plan_device.patch_device_plan`, which
+    re-pads untouched units' tile runs when a streaming delta changes the
+    global tile capacity."""
+    counts = np.asarray(counts, dtype=np.int64)
+    out = np.zeros((stacked.shape[0], t) + stacked.shape[2:], dtype=stacked.dtype)
+    t_copy = min(stacked.shape[1], t)
+    mask = np.arange(t_copy, dtype=np.int64)[None, :] < counts[:, None]
+    out[:, :t_copy][mask] = stacked[:, :t_copy][mask]
+    return out
 
 
 def pad_x_blocks(x: np.ndarray, num_col_blocks: int, bn: int) -> np.ndarray:

@@ -1,0 +1,335 @@
+"""Chaos tier: the serving engine under unit loss, at every kill point.
+
+The contract under test (DESIGN.md §14): *recovered ≡ uninterrupted*.
+A :class:`FaultInjector` kills a unit at a parametrized engine fault
+point — after refill (mid-``step``), after a lane's batched iteration
+(mid-solve), before/after an incremental update is computed (mid-plan),
+and between a generation archive's write and its marker commit
+(mid-save, the worst moment) — and every run must drain to results
+bitwise equal to the run that never failed, with no ticket lost,
+duplicated, or double-counted. Detection paths beyond the injector:
+:class:`Heartbeat` timeout for units dying between ticks, and
+:class:`StragglerMonitor` demotion for units that are merely slow.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import SparseDelta, Topology, distribute, plancache
+from repro.runtime.fault import FaultInjector, Heartbeat
+from repro.serve.sparse import SparseServeEngine, Status
+from repro.sparse.formats import COO
+
+N = 160
+TOPO = Topology(2, 2)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+def _diag_heavy_coo(seed, n=N, nnz=1400):
+    rng = np.random.default_rng(seed)
+    row = rng.integers(0, n, nnz).astype(np.int32)
+    col = rng.integers(0, n, nnz).astype(np.int32)
+    val = rng.standard_normal(nnz).astype(np.float32)
+    d = np.arange(n, dtype=np.int32)
+    row = np.concatenate([row, d])
+    col = np.concatenate([col, d])
+    val = np.concatenate([val, np.full(n, 8.0, np.float32)])
+    order = np.argsort(row, kind="stable")
+    return COO((n, n), row[order], col[order], val[order])
+
+
+@pytest.fixture(scope="module")
+def session():
+    return distribute(
+        _diag_heavy_coo(1), topology=TOPO, combo="NL-HL",
+        exchange="selective", block=32, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def payloads():
+    rng = np.random.default_rng(9)
+    return {
+        "seeds": rng.random(N).astype(np.float32),
+        "b": rng.random(N).astype(np.float32),
+    }
+
+
+def _serve(session, payloads, *, injector=None, recovery_dir=None, heartbeat=None,
+           latency_probe=None, **engine_kw):
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", fault_injector=injector,
+        recovery_dir=recovery_dir, heartbeat=heartbeat,
+        latency_probe=latency_probe, clock=FakeClock(), **engine_kw,
+    )
+    eng.register_graph("g", session)
+    tickets = [
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=10),
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=6),
+        eng.submit("g", "jacobi", payload={"b": payloads["b"]}, iters=8),
+    ]
+    eng.run_until_drained()
+    return eng, tickets
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(session, payloads):
+    _, tickets = _serve(session, payloads)
+    assert all(t.status is Status.DONE for t in tickets)
+    return tickets
+
+
+def _assert_recovered_equals(base, got):
+    for t0, t1 in zip(base, got):
+        assert t1.status is Status.DONE, (t1.status, t1.error)
+        assert np.array_equal(t0.result.x, t1.result.x)
+        assert t0.result.residuals == t1.result.residuals
+        assert t0.result.iters_run == t1.result.iters_run
+
+
+# ---------------------------------------------------------------------------
+# Every kill point inside step(): refill boundaries and mid-solve
+
+
+@pytest.mark.parametrize("kill_at", range(12))
+def test_kill_point_matrix_is_bitwise(session, payloads, uninterrupted,
+                                      tmp_path, kill_at):
+    """Kill unit 1 at engine fault point ``kill_at`` (the points tile
+    the tick: post-refill, then after each lane's batched iteration) —
+    the drained results must be bitwise those of the run that never
+    failed, every ticket terminal exactly once."""
+    injector = FaultInjector(schedule={kill_at: 1})
+    eng, got = _serve(
+        session, payloads, injector=injector, recovery_dir=str(tmp_path)
+    )
+    assert injector.fired == [kill_at]
+    assert eng.recoveries == 1 and eng.dead_units == {1}
+    _assert_recovered_equals(uninterrupted, got)
+    assert eng.metrics.completed == len(got)  # nothing lost or re-finished
+
+
+def test_two_sequential_failures(session, payloads, uninterrupted, tmp_path):
+    injector = FaultInjector(schedule={2: 1, 9: 3})
+    eng, got = _serve(
+        session, payloads, injector=injector, recovery_dir=str(tmp_path)
+    )
+    assert eng.recoveries == 2 and eng.dead_units == {1, 3}
+    _assert_recovered_equals(uninterrupted, got)
+
+
+def test_no_ticket_lost_or_duplicated_under_churn(session, tmp_path):
+    """Overloaded queue + mid-tick kill: the terminal counts still add
+    up to exactly one outcome per admitted ticket."""
+    rng = np.random.default_rng(2)
+    eng = SparseServeEngine(
+        batch_slots=2, executor="simulate", clock=FakeClock(),
+        fault_injector=FaultInjector(schedule={5: 0}),
+        recovery_dir=str(tmp_path),
+    )
+    eng.register_graph("g", distribute(
+        _diag_heavy_coo(3), topology=TOPO, block=32, seed=0))
+    tickets = [
+        eng.submit("g", "pagerank",
+                   payload={"seeds": rng.random(N).astype(np.float32)}, iters=4)
+        for _ in range(9)
+    ]
+    eng.run_until_drained()
+    assert all(t.status is Status.DONE for t in tickets)
+    assert eng.metrics.completed == len(tickets)
+    assert eng.metrics.submitted == len(tickets)
+    tids = [t.tid for t in tickets]
+    assert len(set(tids)) == len(tids)
+
+
+# ---------------------------------------------------------------------------
+# Kill points inside update_graph / checkpoint_graph (mid-plan, mid-save)
+
+
+@pytest.mark.parametrize("kill_at", range(4))
+def test_update_and_checkpoint_kill_points(session, payloads, tmp_path, kill_at):
+    """Fault points 0/1 hit checkpoint_graph (pre-archive, between
+    archive write and marker commit); 2/3 hit update_graph (before and
+    after the incremental update is computed). All four recover to the
+    same bits as the uninterrupted update."""
+    delta = SparseDelta.upserts(
+        session.matrix.shape, np.array([3]), np.array([5]),
+        np.array([0.625], dtype=np.float32),
+    )
+    injector = FaultInjector(schedule={kill_at: 2})
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", clock=FakeClock(),
+        fault_injector=injector, recovery_dir=str(tmp_path),
+    )
+    eng.register_graph("g", session)
+    gen = eng.checkpoint_graph("g")
+    report = eng.update_graph("g", delta)
+    assert injector.fired == [kill_at]
+    assert eng.recoveries == 1
+    assert report.action in ("patched", "replanned")
+    t = eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=8)
+    eng.run_until_drained()
+    assert t.status is Status.DONE
+
+    ref_eng = SparseServeEngine(batch_slots=4, executor="simulate",
+                                clock=FakeClock())
+    ref_eng.register_graph("g", session.update(delta))
+    t_ref = ref_eng.submit(
+        "g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=8)
+    ref_eng.run_until_drained()
+    assert np.array_equal(t.result.x, t_ref.result.x)
+    # the delta was journaled exactly once against the committed gen
+    assert len(plancache.load_journal(str(tmp_path), "g", gen)) == 1
+
+
+def test_kill_during_plan_store_save_keeps_last_good(session, tmp_path):
+    """A crash between archive write and marker commit must leave the
+    *previous* generation committed; the engine's retry then commits a
+    fresh one — the marker never points at a torn write."""
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", clock=FakeClock(),
+        fault_injector=FaultInjector(schedule={3: 1}),  # 2nd ckpt, pre-commit
+        recovery_dir=str(tmp_path),
+    )
+    eng.register_graph("g", session)
+    gen0 = eng.checkpoint_graph("g")
+    assert plancache.last_good_generation(str(tmp_path), "g") == gen0
+    gen1 = eng.checkpoint_graph("g")  # killed mid-commit, recovers, retries
+    assert eng.recoveries == 1
+    assert gen1 > gen0
+    assert plancache.last_good_generation(str(tmp_path), "g") == gen1
+    loaded = plancache.load_last_good(str(tmp_path), "g", executor="simulate")
+    assert loaded is not None and loaded[1] == gen1
+
+
+def test_recovery_replays_journal_from_disk(session, payloads, tmp_path):
+    """Checkpoint → two journaled updates → kill mid-solve: the rebuilt
+    lanes must serve the *updated* matrix (last good + journal replay),
+    bitwise equal to a never-failed engine over the same update chain."""
+    rng = np.random.default_rng(4)
+    a = session.matrix
+    d1 = SparseDelta.upserts(a.shape, np.array([10]), np.array([12]),
+                             np.array([1.5], dtype=np.float32))
+    d2 = SparseDelta.upserts(a.shape, np.array([40]), np.array([44]),
+                             np.array([-2.0], dtype=np.float32))
+
+    def drive(injector, recovery_dir):
+        eng = SparseServeEngine(
+            batch_slots=4, executor="simulate", clock=FakeClock(),
+            fault_injector=injector, recovery_dir=recovery_dir,
+        )
+        eng.register_graph("g", session)
+        eng.checkpoint_graph("g")
+        eng.update_graph("g", d1)
+        eng.update_graph("g", d2)
+        t = eng.submit("g", "pagerank",
+                       payload={"seeds": payloads["seeds"]}, iters=10)
+        eng.run_until_drained()
+        return eng, t
+
+    base_dir = tmp_path / "base"
+    chaos_dir = tmp_path / "chaos"
+    _, t_base = drive(None, str(base_dir))
+    # Fault points 0..5 are consumed by checkpoint+updates; 6 lands
+    # after the first tick's refill — mid-solve, lanes live.
+    eng, t_chaos = drive(FaultInjector(schedule={7: 1}), str(chaos_dir))
+    assert eng.recoveries == 1
+    assert t_chaos.status is Status.DONE
+    assert np.array_equal(t_base.result.x, t_chaos.result.x)
+    assert t_base.result.residuals == t_chaos.result.residuals
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat: death between ticks
+
+
+def test_heartbeat_detects_silent_unit(session, payloads, uninterrupted):
+    hb = Heartbeat(num_workers=TOPO.units, timeout=0.005)
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", heartbeat=hb, clock=FakeClock(),
+    )
+    eng.register_graph("g", session)
+    tickets = [
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=10),
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=6),
+        eng.submit("g", "jacobi", payload={"b": payloads["b"]}, iters=8),
+    ]
+    eng.step()
+    eng.mark_unit_silent(3)
+    time.sleep(0.02)  # real clock: Heartbeat is monotonic-based
+    eng.run_until_drained()
+    assert eng.dead_units == {3} and eng.recoveries == 1
+    _assert_recovered_equals(uninterrupted, tickets)
+
+
+# ---------------------------------------------------------------------------
+# Straggler demotion: slow is the new dead
+
+
+def test_straggler_demotion(session, payloads, uninterrupted):
+    latency = {u: 1.0 for u in range(TOPO.units)}
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", clock=FakeClock(),
+        latency_probe=lambda: dict(latency),
+        straggler_factor=3.0, straggler_patience=3,
+    )
+    eng.register_graph("g", session)
+    tickets = [
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=10),
+        eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=6),
+        eng.submit("g", "jacobi", payload={"b": payloads["b"]}, iters=8),
+    ]
+    eng.step()
+    eng.step()  # EWMA warmed on healthy latencies
+    latency[2] = 25.0  # synthetic straggler: 25x the fleet
+    eng.run_until_drained()
+    assert eng.dead_units == {2} and eng.recoveries == 1
+    _assert_recovered_equals(uninterrupted, tickets)
+
+
+def test_transient_blip_is_not_demoted(session, payloads):
+    """One slow tick is a blip, not a straggler — patience requires
+    *consecutive* flags before demotion."""
+    latency = {u: 1.0 for u in range(TOPO.units)}
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", clock=FakeClock(),
+        latency_probe=lambda: dict(latency),
+        straggler_factor=3.0, straggler_patience=3,
+    )
+    eng.register_graph("g", session)
+    eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=10)
+    eng.step()
+    eng.step()
+    latency[2] = 25.0
+    eng.step()  # one flagged tick...
+    latency[2] = 1.0  # ...then healthy again
+    eng.run_until_drained()
+    assert eng.dead_units == set() and eng.recoveries == 0
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+
+
+def test_max_recoveries_bounds_a_wedged_cluster(session, payloads, tmp_path):
+    """An injector that kills at every fault point must end in a loud
+    RuntimeError, not an infinite recover-retry loop."""
+    injector = FaultInjector(schedule={k: k % TOPO.units for k in range(200)})
+    eng = SparseServeEngine(
+        batch_slots=4, executor="simulate", clock=FakeClock(),
+        fault_injector=injector, recovery_dir=str(tmp_path), max_recoveries=3,
+    )
+    eng.register_graph("g", session)
+    eng.submit("g", "pagerank", payload={"seeds": payloads["seeds"]}, iters=4)
+    with pytest.raises(RuntimeError, match="recoveries"):
+        eng.run_until_drained()

@@ -258,7 +258,7 @@ def test_distribute_budget_prunes_as_it_writes(problem, tmp_path):
 def test_gc_on_missing_dir_is_noop(tmp_path):
     stats = plancache.gc(str(tmp_path / "nope"), 0)
     assert stats == {"files_removed": 0, "bytes_freed": 0, "bytes_in_use": 0,
-                     "tmp_removed": 0}
+                     "tmp_removed": 0, "files_pinned": 0}
 
 
 def test_gc_ignores_foreign_files(problem, tmp_path):
@@ -326,3 +326,150 @@ def test_set_memo_limit_reports_and_applies_now(problem, tmp_path):
     limits = plancache.set_memo_limit(max_sessions=1)
     assert limits["max_sessions"] == 1
     assert list(plancache._MEMO) == [_key(a, 2)]
+
+
+# ---------------------------------------------------------------------------
+# GC vs lazy loads: the PR 5 race (gc pruning an archive a live lazy
+# session still needs) is closed by pinning
+
+
+def test_gc_never_collects_live_lazy_archive(problem, tmp_path):
+    a, x = problem
+    cache = str(tmp_path / "plans")
+    s1 = distribute(a, topology=TOPO, combo="NL-HL", cache_dir=cache)
+    y_ref = np.asarray(s1.spmv(x))
+    path = _plan_file(cache)
+    plancache.clear_memo()
+    lazy = plancache.load_session(path, lazy=True)
+    stats = plancache.gc(cache, budget_bytes=0)
+    assert stats["files_pinned"] == 1 and stats["files_removed"] == 0
+    assert os.path.exists(path)
+    # First touch materializes from the still-present archive, bitwise.
+    assert np.array_equal(y_ref, np.asarray(lazy.spmv(x)))
+    # spmv only forces the execution arrays; the matrix/partition thunks
+    # still point at the file, so the pin must hold until full
+    # materialization.
+    stats = plancache.gc(cache, budget_bytes=0)
+    assert stats["files_pinned"] == 1
+    lazy.materialize()
+    stats = plancache.gc(cache, budget_bytes=0)
+    assert stats["files_removed"] == 1 and stats["files_pinned"] == 0
+
+
+def test_gc_pin_released_when_lazy_session_dies(problem, tmp_path):
+    import gc as pygc
+
+    a, _ = problem
+    cache = str(tmp_path / "plans")
+    distribute(a, topology=TOPO, combo="NL-HL", cache_dir=cache)
+    path = _plan_file(cache)
+    plancache.clear_memo()
+    lazy = plancache.load_session(path, lazy=True)
+    del lazy
+    pygc.collect()
+    stats = plancache.gc(cache, budget_bytes=0)
+    assert stats["files_removed"] == 1 and stats["files_pinned"] == 0
+
+
+def test_writer_gc_reader_race(problem, tmp_path):
+    """Concurrent writer + GC hammering + lazy readers. The contract: a
+    load may miss cleanly (ValueError / missing file — the caller
+    replans, same as any cache miss), but a session that *was* returned
+    must always materialize to the right bits — gc can never break it
+    after the fact."""
+    a, x = problem
+    cache = str(tmp_path / "plans")
+    sess = distribute(a, topology=TOPO, combo="NL-HL", cache_dir=cache)
+    y_ref = np.asarray(sess.spmv(x))
+    path = _plan_file(cache)
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                plancache.gc(cache, budget_bytes=0)
+                plancache.save_session(sess, path)
+            except Exception as err:  # pragma: no cover - failure path
+                errors.append(err)
+                return
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    loaded = 0
+    try:
+        while loaded < 12 and not errors:
+            plancache.clear_memo()
+            try:
+                lazy = plancache.load_session(path, lazy=True)
+            except (ValueError, OSError):
+                continue  # clean load-time miss; caller would replan
+            loaded += 1
+            assert np.array_equal(y_ref, np.asarray(lazy.materialize().spmv(x)))
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert loaded == 12
+
+
+def test_gc_pins_last_good_generation_and_journal(problem, tmp_path):
+    from repro.sparse.delta import SparseDelta
+
+    a, _ = problem
+    cache = str(tmp_path / "gens")
+    sess = distribute(a, topology=TOPO, combo="NL-HL")
+    plancache.save_generation(sess, cache, "g")
+    _, gen1 = plancache.save_generation(sess, cache, "g")
+    delta = SparseDelta.upserts(
+        a.shape, a.row[:1], a.col[:1], np.array([0.5], np.float32))
+    plancache.journal_delta(cache, "g", gen1, delta)
+    stats = plancache.gc(cache, budget_bytes=0)
+    # gen0 superseded and collected; gen1 + its journal survive any budget
+    assert plancache.last_good_generation(cache, "g") == gen1
+    assert stats["files_removed"] == 1 and stats["files_pinned"] == 2
+    got = plancache.load_last_good(cache, "g")
+    assert got is not None and got[1] == gen1
+    assert len(plancache.load_journal(cache, "g", gen1)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Memo accounting: resident bytes, not logical nbytes
+
+
+def test_session_nbytes_is_resident_not_logical(problem, tmp_path):
+    a, _ = problem
+    path = str(tmp_path / "plan.npz")
+    sess = distribute(a, topology=TOPO, combo="NL-HL")
+    sess.save(path)
+    lazy = plancache.load_session(path, lazy=True)
+    assert plancache._session_nbytes(lazy) == 0  # nothing resident yet
+    lazy.materialize()
+    full = plancache._session_nbytes(lazy)
+    assert full > 0
+    assert plancache._session_nbytes(sess) == full
+
+
+def test_memo_byte_budget_counts_resident_bytes(problem, tmp_path):
+    """Lazy hydrated sessions are near-free until materialized: a byte
+    budget that could never hold them materialized holds many lazy, and
+    eviction kicks in (oldest first) only once bytes become resident."""
+    a, _ = problem
+    paths = []
+    for i in range(3):
+        sess = distribute(a, topology=TOPO, combo="NL-HL", seed=i)
+        p = str(tmp_path / f"p{i}.npz")
+        sess.save(p)
+        paths.append(p)
+    plancache.clear_memo()
+    plancache.set_memo_limit(max_sessions=None, max_bytes=4096)
+    hydrated = [plancache.hydrate_session(p) for p in paths]
+    assert len(plancache._MEMO) == 3  # all resident-cheap, none evicted
+    hydrated[0].materialize()  # now key 0 actually occupies memory
+    sess3 = distribute(a, topology=TOPO, combo="NL-HL", seed=3)
+    p3 = str(tmp_path / "p3.npz")
+    sess3.save(p3)
+    plancache.hydrate_session(p3)
+    keys = list(plancache._MEMO)
+    assert f"file:{os.path.abspath(paths[0])}" not in keys  # oldest+heavy out
+    assert f"file:{os.path.abspath(p3)}" in keys
