@@ -44,10 +44,10 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
 # The headline planning config: same order of magnitude as the largest
 # serving workloads the ROADMAP targets, banded like the paper's
 # dominant structure class.
-SCALE_CONFIG = dict(n=60_000, nnz=1_200_000, topology=(4, 4), combo="NL-HC",
-                    exchange="selective", block=16, seed=0)
-QUICK_CONFIG = dict(n=8_000, nnz=160_000, topology=(2, 2), combo="NL-HC",
-                    exchange="selective", block=16, seed=0)
+SCALE_CONFIG = {"n": 60_000, "nnz": 1_200_000, "topology": (4, 4),
+                "combo": "NL-HC", "exchange": "selective", "block": 16, "seed": 0}
+QUICK_CONFIG = {"n": 8_000, "nnz": 160_000, "topology": (2, 2),
+                "combo": "NL-HC", "exchange": "selective", "block": 16, "seed": 0}
 
 # Pre-refactor (commit 8df126e) wall times on the SCALE_CONFIG, measured
 # on the reference container: the Python-loop `_fm_pass`/`_phase2`
@@ -99,7 +99,7 @@ def summary(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
         cells.setdefault((r["matrix"], r["f"]), []).append(r)
     for group in cells.values():
         for crit in crits:
-            best = min(group, key=lambda r: r[crit])
+            best = min(group, key=lambda r, crit=crit: r[crit])
             wins[best["combo"]][crit] += 1
     n = max(len(cells), 1)
     return {c: {k: v / n for k, v in w.items()} for c, w in wins.items()}

@@ -52,10 +52,10 @@ __all__ = ["run_mix", "main"]
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
-FULL_CONFIG = dict(n=4096, nnz=80_000, topology=(2, 2), block=16,
-                   batch_slots=8, requests=64, iters=20, rate_x=3.0)
-QUICK_CONFIG = dict(n=1024, nnz=16_000, topology=(2, 2), block=16,
-                    batch_slots=4, requests=16, iters=10, rate_x=2.0)
+FULL_CONFIG = {"n": 4096, "nnz": 80_000, "topology": (2, 2), "block": 16,
+               "batch_slots": 8, "requests": 64, "iters": 20, "rate_x": 3.0}
+QUICK_CONFIG = {"n": 1024, "nnz": 16_000, "topology": (2, 2), "block": 16,
+                "batch_slots": 4, "requests": 16, "iters": 10, "rate_x": 2.0}
 
 # Acceptance floor for the committed full run (ISSUE 6): batched
 # throughput ≥ 2× sequential at batch_slots=8. The CI --quick gate only
@@ -123,8 +123,8 @@ def _trace(cfg: Dict, mix_name: str, rate: float, rng) -> List[Dict]:
     out = []
     for k, arr in zip(picks, arrivals):
         graph, solver, _ = kinds[k]
-        out.append(dict(arrival=float(arr), graph=graph, solver=solver,
-                        payload=_payload(solver, cfg["n"], rng)))
+        out.append({"arrival": float(arr), "graph": graph, "solver": solver,
+                    "payload": _payload(solver, cfg["n"], rng)})
     return out
 
 
@@ -152,7 +152,7 @@ def _warmup(sessions: Dict, cfg: Dict) -> float:
     # measures warm service time — what a steady-state server sees.
     for timed in (False, True):
         times = []
-        for name, sess in sessions.items():
+        for sess in sessions.values():
             for solver in ("pagerank", "jacobi", "spmv"):
                 payload = _payload(solver, cfg["n"], rng)
                 t0 = time.perf_counter()

@@ -1,0 +1,62 @@
+"""Static verification layer (DESIGN.md §15).
+
+Three layers, no execution required by any of them:
+
+* :mod:`repro.analysis.plan_lint` — composable invariant passes over
+  in-memory plans (``SparseSession.verify``) and on-disk plan archives
+  (``python -m repro.analysis <store-dir>``).
+* :mod:`repro.analysis.jaxpr_audit` — traces every stepper/executor
+  combo and pins the collective schedule extracted from the jaxpr
+  (all_to_alls before the first contraction on the overlap path, no f64
+  promotions, no host callbacks, no recompile bait).
+* ``tools/check_invariants.py`` — AST-level repo lint rules, run in CI.
+"""
+from repro.analysis.passes import (
+    LEVELS,
+    Finding,
+    LintReport,
+    PlanLintError,
+    PlanView,
+    archive_pass,
+    archive_pass_names,
+    plan_pass,
+    plan_pass_names,
+)
+from repro.analysis.jaxpr_audit import (
+    AuditReport,
+    audit_jaxpr,
+    audit_plan,
+    audit_session,
+    golden_signature,
+    schedule_signature,
+    trace_pmvc_step,
+)
+from repro.analysis.plan_lint import (
+    lint_archive,
+    lint_plan,
+    lint_session,
+    lint_store,
+)
+
+__all__ = [
+    "AuditReport",
+    "audit_jaxpr",
+    "audit_plan",
+    "audit_session",
+    "golden_signature",
+    "schedule_signature",
+    "trace_pmvc_step",
+    "LEVELS",
+    "Finding",
+    "LintReport",
+    "PlanLintError",
+    "PlanView",
+    "plan_pass",
+    "archive_pass",
+    "plan_pass_names",
+    "archive_pass_names",
+    "lint_plan",
+    "lint_session",
+    "lint_archive",
+    "lint_store",
+]

@@ -30,7 +30,7 @@ from repro.core.combined import (
     LevelSpec,
     PAPER_COMBOS,
     TwoLevelPlan,
-    _comm_stats,
+    comm_stats,
     partition_lines,
     two_level_partition,
 )
@@ -99,7 +99,7 @@ class PartitionResult:
         """Per-unit C_X / C_Y / DR / DE quantities (paper ch.3 §4.2.3)."""
         if self.plan is not None:
             return self.plan.core_stats
-        return _comm_stats(a, self.elem_unit, self.topology.units)
+        return comm_stats(a, self.elem_unit, self.topology.units)
 
     def modeled_cost(self, **kw) -> dict:
         """α-β phase-cost model; needs a two-level plan."""

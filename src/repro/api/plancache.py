@@ -103,6 +103,10 @@ __all__ = [
     "FORMAT_VERSION",
     "READABLE_VERSIONS",
     "plan_key",
+    "archive_members",
+    "read_archive_meta",
+    "expected_archive_members",
+    "verify_archive_payload",
     "save_session",
     "load_session",
     "hydrate_session",
@@ -573,6 +577,21 @@ def _read_meta_and_names(path: str):
     return meta, names
 
 
+def read_archive_meta(path: str):
+    """Public accessor for an archive's parsed meta entry and member-name
+    set (``(meta, names)``) — what the :mod:`repro.analysis` archive
+    passes and external tooling build on. Raises ``ValueError`` on an
+    unreadable archive."""
+    return _read_meta_and_names(path)
+
+
+def expected_archive_members(meta: dict) -> Set[str]:
+    """The member names a complete archive with this meta must carry —
+    the presence gate :func:`load_session` enforces, exposed for the
+    analysis layer's structure pass."""
+    return _expected_members(meta)
+
+
 def _expected_members(meta: dict) -> Set[str]:
     version = meta["version"]
     members = {
@@ -602,6 +621,22 @@ def _expected_members(meta: dict) -> Set[str]:
     return members
 
 
+def _member_payload_offset(fh, path: str, info: "zipfile.ZipInfo") -> int:
+    """Byte offset of the member's raw payload inside the archive file
+    (past the zip local header). Raises ``ValueError`` naming the member
+    and its header offset when the local header is damaged."""
+    fh.seek(info.header_offset)
+    hdr = fh.read(30)
+    if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+        raise ValueError(
+            f"plan file {path!r}: bad local header for member "
+            f"{info.filename!r} at byte offset {info.header_offset}"
+        )
+    nlen = int.from_bytes(hdr[26:28], "little")
+    elen = int.from_bytes(hdr[28:30], "little")
+    return info.header_offset + 30 + nlen + elen
+
+
 def _verify_member_crc(path: str, info: "zipfile.ZipInfo") -> None:
     """Stream the member's raw bytes through CRC-32 against the archive's
     recorded checksum. The mmap fast path bypasses zipfile's read-time
@@ -610,28 +645,92 @@ def _verify_member_crc(path: str, info: "zipfile.ZipInfo") -> None:
     valid archive — without this, a flipped byte in a tile member would
     compute silently wrong results instead of failing loudly. One
     sequential pass at materialization time (~GB/s, and it pre-warms the
-    page cache the memmap then serves from)."""
+    page cache the memmap then serves from). Failures name the member
+    and the byte offset of the fault, so an operator can localize the
+    damage without a hex editor."""
     crc = 0
     with open(path, "rb") as fh:
-        fh.seek(info.header_offset)
-        hdr = fh.read(30)
-        if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
-            raise ValueError(f"plan file {path!r}: bad local header for {info.filename}")
-        nlen = int.from_bytes(hdr[26:28], "little")
-        elen = int.from_bytes(hdr[28:30], "little")
-        fh.seek(info.header_offset + 30 + nlen + elen)
+        data_off = _member_payload_offset(fh, path, info)
+        fh.seek(data_off)
         left = info.file_size
         while left:
             chunk = fh.read(min(left, 1 << 22))
             if not chunk:
-                raise ValueError(f"plan file {path!r}: truncated member {info.filename}")
+                raise ValueError(
+                    f"plan file {path!r}: member {info.filename!r} truncated "
+                    f"at byte offset {data_off + info.file_size - left} "
+                    f"({left} of {info.file_size} payload bytes missing)"
+                )
             crc = zlib.crc32(chunk, crc)
             left -= len(chunk)
     if crc != info.CRC:
         raise ValueError(
-            f"plan file {path!r}: CRC mismatch in member {info.filename} "
-            "(in-place corruption) — evict the file and replan"
+            f"plan file {path!r}: CRC mismatch in member {info.filename!r} "
+            f"(payload at byte offset {data_off}, {info.file_size} bytes; "
+            f"expected crc32 {info.CRC:#010x}, got {crc:#010x}) "
+            "— in-place corruption; evict the file and replan"
         )
+
+
+def archive_members(path: str) -> Dict[str, dict]:
+    """Layout of every ``.npy`` member in a plan archive, keyed by the
+    array name (``.npy`` suffix stripped): ``header_offset`` /
+    ``payload_offset`` / ``size`` (raw payload bytes) / ``crc`` /
+    ``compressed``. The byte offsets are what load-failure messages and
+    the :mod:`repro.analysis` archive passes report, so faults localize
+    to a file range. Raises ``ValueError`` on an unreadable archive."""
+    out: Dict[str, dict] = {}
+    try:
+        with zipfile.ZipFile(path) as zf:
+            infos = [i for i in zf.infolist() if i.filename.endswith(".npy")]
+        with open(path, "rb") as fh:
+            for info in infos:
+                out[info.filename[: -len(".npy")]] = {
+                    "header_offset": info.header_offset,
+                    "payload_offset": _member_payload_offset(fh, path, info),
+                    "size": info.file_size,
+                    "crc": info.CRC,
+                    "compressed": info.compress_type != zipfile.ZIP_STORED,
+                }
+    except ValueError:
+        raise
+    except Exception as e:  # BadZipFile, OSError...
+        raise ValueError(f"unreadable plan file {path!r}: {e}") from e
+    return out
+
+
+def verify_archive_payload(path: str, members=None) -> None:
+    """CRC-check the raw payload bytes of ``members`` (default: every
+    ``.npy`` member) against the archive's recorded checksums. Raises
+    ``ValueError`` naming the failing member and the byte offset of the
+    fault — the archive-integrity primitive behind
+    ``python -m repro.analysis``."""
+    with zipfile.ZipFile(path) as zf:
+        infos = {
+            i.filename[: -len(".npy")]: i
+            for i in zf.infolist()
+            if i.filename.endswith(".npy")
+        }
+    names = list(infos) if members is None else list(members)
+    for name in names:
+        info = infos.get(name)
+        if info is None:
+            raise ValueError(f"plan file {path!r} has no member {name + '.npy'!r}")
+        if info.compress_type != zipfile.ZIP_STORED:
+            # The recorded CRC covers *uncompressed* data — stream the
+            # member through zipfile, which checks it on the way out.
+            try:
+                with zipfile.ZipFile(path) as zf, zf.open(info) as fh:
+                    while fh.read(1 << 20):
+                        pass
+            except Exception as e:
+                raise ValueError(
+                    f"plan file {path!r}: member {info.filename!r} failed "
+                    f"integrity check (local header at byte offset "
+                    f"{info.header_offset}): {e}"
+                ) from e
+        else:
+            _verify_member_crc(path, info)
 
 
 def _mmap_member(path: str, name: str) -> Optional[np.ndarray]:
@@ -693,8 +792,26 @@ class _ArchiveReader:
         m = _mmap_member(self.path, name)
         if m is not None:
             return m
-        with np.load(self.path, allow_pickle=False) as z:
-            return z[name]
+        try:
+            with np.load(self.path, allow_pickle=False) as z:
+                return z[name]
+        except ValueError:
+            raise  # already localized (CRC / header faults name the member)
+        except Exception as e:  # BadZipFile, zlib.error, OSError, KeyError...
+            where = ""
+            try:
+                with zipfile.ZipFile(self.path) as zf:
+                    info = zf.getinfo(name + ".npy")
+                where = (
+                    f" (local header at byte offset {info.header_offset}, "
+                    f"{info.file_size} payload bytes)"
+                )
+            except Exception:
+                pass  # archive too damaged to localize further
+            raise ValueError(
+                f"plan file {self.path!r}: failed reading member "
+                f"{name + '.npy'!r}{where}: {e}"
+            ) from e
 
 
 def _memoized(fn: Callable):

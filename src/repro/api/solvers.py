@@ -206,7 +206,7 @@ def power_iteration(
     lam_prev, lam = 0.0, 0.0
     residuals: List[float] = []
     k = 0
-    for k in range(1, iters + 1):
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
         y = session.spmv(x)
         lam = float(np.linalg.norm(y))
         x = (y / max(lam, 1e-30)).astype(np.float32)
@@ -275,7 +275,7 @@ def block_power_iteration(
     lam = lam_prev
     residuals: List[float] = []
     k = 0
-    for k in range(1, iters + 1):
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
         y = session.spmv(x)  # [B, N] — one SpMM for the whole block
         q, r = np.linalg.qr(y.T)
         lam = np.abs(np.diagonal(r))
@@ -342,7 +342,7 @@ def jacobi(
     r = bv - session.spmv(z)
     residuals: List[float] = []
     k = 0
-    for k in range(1, iters + 1):
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
         z = (z + r / d).astype(np.float32)
         r = bv - session.spmv(z)
         rn = np.linalg.norm(r, axis=-1)
@@ -457,7 +457,7 @@ def pagerank(
     r = r0
     residuals: List[float] = []
     k = 0
-    for k in range(1, iters + 1):
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
         r_new = damping * pr_step(r) + (1.0 - damping) * s
         norm = np.abs(r_new).sum(axis=-1, keepdims=True)
         r_new = (r_new / np.maximum(norm, 1e-30)).astype(np.float32)
@@ -495,7 +495,7 @@ def conjugate_gradient(
     rs = float(r @ r)
     residuals: List[float] = [float(np.sqrt(rs))]
     k = 0
-    for k in range(1, iters + 1):
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
         ap = session.spmv(p)
         denom = float(p @ ap)
         if abs(denom) < 1e-30:

@@ -32,6 +32,7 @@ __all__ = [
     "LevelSpec",
     "CommStats",
     "TwoLevelPlan",
+    "comm_stats",
     "two_level_partition",
     "partition_lines",
 ]
@@ -172,7 +173,7 @@ def partition_lines(
     raise ValueError(f"unknown method {spec.method}")
 
 
-def _comm_stats(
+def comm_stats(
     a: COO, owner: np.ndarray, num_units: int
 ) -> CommStats:
     """Element-owner array -> per-unit nnz / C_X / C_Y."""
@@ -309,8 +310,8 @@ def two_level_partition(
     # --- Metrics ------------------------------------------------------------
     t2 = time.perf_counter()
     unit = elem_node.astype(np.int64) * c + elem_core
-    node_stats = _comm_stats(a, elem_node.astype(np.int64), f)
-    core_stats = _comm_stats(a, unit, f * c)
+    node_stats = comm_stats(a, elem_node.astype(np.int64), f)
+    core_stats = comm_stats(a, unit, f * c)
     if timings is not None:
         timings["inter_s"] = t1 - t0
         timings["intra_s"] = t2 - t1

@@ -35,7 +35,7 @@ def reshard_tree(tree: Any, mesh: Mesh, spec_fn: Callable[[str, Any], P]) -> Any
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         sharding = NamedSharding(mesh, spec_fn(key, leaf))
         out.append(jax.device_put(leaf, sharding))
-    return jax.tree_util.tree_unflatten(treedef, [o for o in out])
+    return jax.tree_util.tree_unflatten(treedef, list(out))
 
 
 def elastic_restart(

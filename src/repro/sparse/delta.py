@@ -85,7 +85,15 @@ class SparseDelta:
     @classmethod
     def merge(cls, shape, up_row=(), up_col=(), up_val=(),
               del_row=(), del_col=()) -> "SparseDelta":
-        return cls(
+        """Build a combined upsert+delete delta, validated eagerly.
+
+        Malformed batches — mismatched array lengths, out-of-bounds
+        coordinates, duplicate coordinates within one set, or an
+        upsert/delete conflict on the same coordinate — raise
+        ``ValueError`` here, at construction, rather than surfacing
+        later from ``apply`` deep inside ``SparseSession.update``.
+        """
+        delta = cls(
             shape=tuple(shape),
             up_row=_as_index(up_row),
             up_col=_as_index(up_col),
@@ -93,6 +101,8 @@ class SparseDelta:
             del_row=_as_index(del_row),
             del_col=_as_index(del_col),
         )
+        delta.validate()
+        return delta
 
     # ------------------------------------------------------------ accessors
     @property

@@ -1,0 +1,86 @@
+"""SparseDelta.merge edge cases: malformed batches fail eagerly at
+construction with a message naming the problem, instead of surfacing
+later from deep inside ``SparseSession.update``."""
+import numpy as np
+import pytest
+
+from repro.sparse.delta import SparseDelta
+from repro.sparse.generate import PAPER_SUITE, generate
+
+SHAPE = (10, 10)
+
+
+def test_conflicting_upsert_and_delete():
+    with pytest.raises(ValueError, match="upsert and delete sets overlap"):
+        SparseDelta.merge(
+            SHAPE,
+            up_row=[1], up_col=[2], up_val=[3.0],
+            del_row=[1], del_col=[2],
+        )
+
+
+def test_duplicate_upsert_coords():
+    with pytest.raises(ValueError, match="duplicate coordinates in upserts"):
+        SparseDelta.merge(
+            SHAPE, up_row=[4, 4], up_col=[5, 5], up_val=[1.0, 2.0]
+        )
+
+
+def test_duplicate_delete_coords():
+    with pytest.raises(ValueError, match="duplicate coordinates in deletes"):
+        SparseDelta.merge(SHAPE, del_row=[3, 3], del_col=[7, 7])
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"up_row": [10], "up_col": [0], "up_val": [1.0]},
+        {"up_row": [0], "up_col": [-1], "up_val": [1.0]},
+        {"del_row": [0], "del_col": [10]},
+    ],
+)
+def test_out_of_bounds_rejected(kw):
+    with pytest.raises(ValueError, match="coordinates out of bounds for shape"):
+        SparseDelta.merge(SHAPE, **kw)
+
+
+def test_mismatched_lengths_rejected():
+    with pytest.raises(ValueError, match="matching shapes"):
+        SparseDelta.merge(SHAPE, up_row=[1, 2], up_col=[3], up_val=[1.0])
+
+
+def test_empty_merge_is_identity():
+    delta = SparseDelta.merge(SHAPE)
+    assert delta.size == 0
+    a = generate(PAPER_SUITE["bcsstm09"], seed=0)
+    delta = SparseDelta.merge(a.shape)
+    b = delta.apply(a)
+    assert b.row.shape == a.row.shape
+    np.testing.assert_array_equal(b.row, a.row)
+    np.testing.assert_array_equal(b.col, a.col)
+    np.testing.assert_array_equal(b.val, a.val)
+
+
+def test_valid_combined_merge_applies():
+    a = generate(PAPER_SUITE["bcsstm09"], seed=0)
+    # Overwrite one existing entry, insert one new, delete another.
+    r0, c0 = int(a.row[0]), int(a.col[0])
+    r1, c1 = int(a.row[1]), int(a.col[1])
+    akey = set(zip(a.row.tolist(), a.col.tolist()))
+    new = next(
+        (i, j)
+        for i in range(a.shape[0])
+        for j in range(a.shape[1])
+        if (i, j) not in akey
+    )
+    delta = SparseDelta.merge(
+        a.shape,
+        up_row=[r0, new[0]], up_col=[c0, new[1]], up_val=[9.0, 7.0],
+        del_row=[r1], del_col=[c1],
+    )
+    b = delta.apply(a)
+    assert b.row.shape[0] == a.row.shape[0]  # +1 insert, -1 delete
+    bmap = {(int(r), int(c)): float(v) for r, c, v in zip(b.row, b.col, b.val)}
+    assert bmap[(r0, c0)] == 9.0
+    assert bmap[new] == 7.0
+    assert (r1, c1) not in bmap

@@ -1,0 +1,104 @@
+"""Jaxpr collective auditor: golden schedule pins per combo × exchange.
+
+Every pin traces the real stepper through an AbstractMesh — no devices,
+no compilation. The overlap pins are the load-bearing ones: they prove
+all K all_to_alls are issued before the first contraction, which is the
+property the whole §13 pipelining win rests on.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    audit_jaxpr,
+    audit_session,
+    golden_signature,
+    schedule_signature,
+    trace_pmvc_step,
+)
+from repro.api.session import distribute
+from repro.api.topology import Topology
+from repro.configs.paper_pmvc import COMBOS
+from repro.sparse.generate import PAPER_SUITE, generate
+
+TOPO = Topology(nodes=2, cores=2)
+
+
+def _session(exchange, combo="NL-HL"):
+    a = generate(PAPER_SUITE["bcsstm09"], seed=0)
+    return distribute(a, topology=TOPO, combo=combo, exchange=exchange)
+
+
+# ------------------------------------------------------------- golden pins
+
+
+@pytest.mark.parametrize("combo", COMBOS)
+@pytest.mark.parametrize("waves", [1, 2])
+def test_overlap_pins_all_combos(combo, waves):
+    rep = audit_session(_session(f"overlap:{waves}", combo))
+    assert rep.ok, str(rep)
+    assert rep.exchange == "overlap" and rep.waves == waves
+    assert rep.signature == golden_signature("overlap", waves)
+
+
+@pytest.mark.parametrize("exchange", ["replicated", "selective"])
+def test_flat_exchange_pins(exchange):
+    rep = audit_session(_session(exchange))
+    assert rep.ok, str(rep)
+    assert rep.signature == golden_signature(exchange)
+
+
+def test_golden_signature_shape():
+    assert golden_signature(None) == "dot psum"
+    assert golden_signature("replicated") == "dot psum"
+    assert golden_signature("selective") == "a2a dot psum"
+    assert golden_signature("overlap", 2) == "a2a a2a dot dot dot psum"
+    assert golden_signature("overlap:3", 3).count("a2a") == 3
+    with pytest.raises(ValueError):
+        golden_signature("carrier-pigeon")
+
+
+def test_batched_trace_keeps_schedule():
+    sess = _session("overlap:2")
+    closed = trace_pmvc_step(sess.device_plan, sess.selective, batch=4)
+    sig = schedule_signature(closed)
+    # Batched lowering may change the contraction primitive mix, but the
+    # collectives — the part the audit pins — must be unchanged.
+    assert [t for t in sig.split() if t in ("a2a", "psum")] == [
+        "a2a",
+        "a2a",
+        "psum",
+    ]
+
+
+# ------------------------------------------------------- hygiene negatives
+
+
+def test_wrong_wave_count_is_flagged():
+    sess = _session("overlap:2")
+    closed = trace_pmvc_step(sess.device_plan, sess.selective)
+    findings = audit_jaxpr(closed, expect_waves=3)
+    assert any(f.pass_name == "jaxpr/collective-order" for f in findings)
+    assert not audit_jaxpr(closed, expect_waves=2)
+
+
+def test_weak_typed_scan_carry_is_flagged():
+    import jax
+
+    def stepper(xs):
+        # Python-int carry: weak-typed aval, retraces on first call.
+        return jax.lax.scan(lambda c, x: (c + 1, x + c), 0, xs)
+
+    closed = jax.make_jaxpr(stepper)(np.zeros(4, np.float32))
+    findings = audit_jaxpr(closed)
+    assert any(f.pass_name == "jaxpr/loop-carry" for f in findings)
+
+
+def test_clean_jaxpr_has_no_findings():
+    import jax
+
+    def stepper(xs):
+        c0 = np.int32(0)
+        return jax.lax.scan(lambda c, x: (c + np.int32(1), x * 2.0), c0, xs)
+
+    closed = jax.make_jaxpr(stepper)(np.zeros(4, np.float32))
+    assert audit_jaxpr(closed) == []

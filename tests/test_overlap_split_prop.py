@@ -29,7 +29,7 @@ def _check_split_properties(dp, sp):
     for u in range(dp.num_units):
         k = int(dp.real_tiles[u])
         local, halo = split_tiles_local_halo(dp.tile_col[u], k, sp.owned[u])
-        owned = set(int(g) for g in sp.owned[u] if g >= 0)
+        owned = {int(g) for g in sp.owned[u] if g >= 0}
         # Exact partition: union covers every real tile, disjoint.
         both = np.concatenate([local, halo])
         np.testing.assert_array_equal(np.sort(both), np.arange(k))

@@ -81,7 +81,7 @@ def test_wave_partition_properties(waves):
         assert union == remote_needed
         # Ring-distance priority: a block in wave k is never farther
         # from its owner than any block in wave k+1.
-        def max_dist(blocks):
+        def max_dist(blocks, u=u):
             return max(
                 min((int(owner[g]) - u) % dp.num_units,
                     (u - int(owner[g])) % dp.num_units)

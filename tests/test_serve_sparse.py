@@ -123,11 +123,11 @@ def test_continuous_refill_keeps_parity(engine, sessions):
         seeds = rng.random(N).astype(np.float32)
         t = engine.submit("g1", "pagerank", payload={"seeds": seeds}, iters=3 + i)
         cases.append((t, "g1", "pagerank", {"seeds": seeds}, 3 + i))
-    for i in range(5):
+    for _ in range(5):
         b = rng.random(N).astype(np.float32)
         t = engine.submit("g2", "jacobi", payload={"b": b}, iters=7)
         cases.append((t, "g2", "jacobi", {"b": b}, 7))
-    for i in range(3):
+    for _ in range(3):
         x = rng.random(N).astype(np.float32)
         t = engine.submit("g2", "spmv", payload={"x": x})
         cases.append((t, "g2", "spmv", {"x": x}, 1))

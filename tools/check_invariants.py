@@ -1,0 +1,258 @@
+#!/usr/bin/env python
+"""AST-level repo invariant rules — the lints ruff can't express.
+
+Three rules, run in CI (the ``static-analysis`` job) and locally via
+``python tools/check_invariants.py``:
+
+R1  no cross-subpackage private imports: ``from repro.<pkg>...`` may
+    only import underscore-prefixed names/modules from inside the same
+    ``repro.<pkg>`` subpackage. A private helper is a subpackage's
+    internal contract; reaching across freezes it accidentally.
+    Exceptions live in ``PRIVATE_IMPORT_WHITELIST``.
+
+R2  no unseeded randomness in tests/ and benchmarks/: every random
+    draw must flow from an explicit seed — ``np.random.default_rng(0)``
+    yes; the legacy global-state ``np.random.rand(...)`` / bare
+    ``default_rng()`` / stdlib ``random`` module no. Parity suites and
+    benchmark inputs must replay bit-identically.
+
+R3  registry-decorator conventions: every ``@register_*(...)``
+    decorator takes a string-literal first argument (grep-able — a
+    computed name defeats "where is this solver defined"), and no
+    (registry, name) pair is registered twice.
+
+Exit status: 0 clean, 1 findings, 2 usage error. Output is
+``path:line: RULE message`` — one line per finding.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (importing module path relative to repo, imported dotted name) pairs
+# allowed to cross a subpackage boundary with a private name.
+PRIVATE_IMPORT_WHITELIST: frozenset = frozenset()
+
+# Legacy numpy global-state entry points (np.random.X). Seeded
+# constructors are fine; everything else draws from hidden global state.
+_SEEDED_RANDOM_ATTRS = {"default_rng", "Generator", "SeedSequence", "RandomState"}
+
+_SCAN_ROOTS = ("src", "tests", "benchmarks", "tools")
+_RANDOMNESS_ROOTS = ("tests", "benchmarks")
+
+
+def _py_files(*roots: str) -> Iterator[str]:
+    for root in roots:
+        base = os.path.join(REPO, root)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def _rel(path: str) -> str:
+    return os.path.relpath(path, REPO)
+
+
+def _subpackage_of_module(rel_path: str) -> str | None:
+    """``src/repro/api/session.py`` -> ``api``; None outside repro."""
+    parts = rel_path.split(os.sep)
+    if len(parts) >= 3 and parts[0] == "src" and parts[1] == "repro":
+        return parts[2].removesuffix(".py")
+    return None
+
+
+def _subpackage_of_import(dotted: str) -> str | None:
+    parts = dotted.split(".")
+    if len(parts) >= 2 and parts[0] == "repro":
+        return parts[1]
+    return None
+
+
+def _is_private(name: str) -> bool:
+    """Single-underscore names are private; dunders (``__main__``,
+    ``__version__``, ...) are python-protocol names, not hidden API."""
+    return name.startswith("_") and not (
+        name.startswith("__") and name.endswith("__")
+    )
+
+
+def check_private_imports(path: str, tree: ast.AST) -> List[Tuple[int, str]]:
+    rel = _rel(path)
+    own = _subpackage_of_module(rel)
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.level or not node.module:
+                continue  # relative imports stay inside their package
+            src_pkg = _subpackage_of_import(node.module)
+            if src_pkg is None:
+                continue
+            private_names = [
+                a.name for a in node.names if _is_private(a.name)
+            ]
+            private_module = any(_is_private(p) for p in node.module.split("."))
+            if not private_names and not private_module:
+                continue
+            if own == src_pkg:
+                continue
+            what = private_names[0] if private_names else node.module
+            if (rel, f"{node.module}.{what}") in PRIVATE_IMPORT_WHITELIST or (
+                rel,
+                node.module,
+            ) in PRIVATE_IMPORT_WHITELIST:
+                continue
+            out.append(
+                (
+                    node.lineno,
+                    f"R1 private import across subpackages: {rel} "
+                    f"(repro.{own or '<outside>'}) imports {what!r} from "
+                    f"{node.module} — add to PRIVATE_IMPORT_WHITELIST or "
+                    "export a public name",
+                )
+            )
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                src_pkg = _subpackage_of_import(a.name)
+                if src_pkg is None or own == src_pkg:
+                    continue
+                if any(_is_private(p) for p in a.name.split(".")):
+                    out.append(
+                        (
+                            node.lineno,
+                            f"R1 private module import across subpackages: "
+                            f"{a.name}",
+                        )
+                    )
+    return out
+
+
+def _is_np_random_attr(node: ast.AST) -> str | None:
+    """``np.random.X`` / ``numpy.random.X`` -> ``"X"``."""
+    if not isinstance(node, ast.Attribute):
+        return None
+    mid = node.value
+    if (
+        isinstance(mid, ast.Attribute)
+        and mid.attr == "random"
+        and isinstance(mid.value, ast.Name)
+        and mid.value.id in ("np", "numpy")
+    ):
+        return node.attr
+    return None
+
+
+def check_randomness(path: str, tree: ast.AST) -> List[Tuple[int, str]]:
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            attr = _is_np_random_attr(node.func)
+            if attr is not None:
+                if attr not in _SEEDED_RANDOM_ATTRS:
+                    out.append(
+                        (
+                            node.lineno,
+                            f"R2 unseeded global-state randomness: "
+                            f"np.random.{attr}(...) — use "
+                            "np.random.default_rng(seed)",
+                        )
+                    )
+                elif not node.args and not node.keywords:
+                    out.append(
+                        (
+                            node.lineno,
+                            f"R2 np.random.{attr}() without a seed — "
+                            "entropy-seeded, not replayable",
+                        )
+                    )
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = (
+                [a.name for a in node.names]
+                if isinstance(node, ast.Import)
+                else [node.module or ""]
+            )
+            if any(n == "random" or n.startswith("random.") for n in names):
+                out.append(
+                    (
+                        node.lineno,
+                        "R2 stdlib random module in tests/benchmarks — "
+                        "use np.random.default_rng(seed)",
+                    )
+                )
+    return out
+
+
+def check_registry_decorators(
+    path: str, tree: ast.AST, seen: dict
+) -> List[Tuple[int, str]]:
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        for deco in node.decorator_list:
+            if not isinstance(deco, ast.Call):
+                continue
+            fn = deco.func
+            name = fn.id if isinstance(fn, ast.Name) else getattr(fn, "attr", "")
+            if not name.startswith("register_"):
+                continue
+            if not deco.args or not (
+                isinstance(deco.args[0], ast.Constant)
+                and isinstance(deco.args[0].value, str)
+            ):
+                out.append(
+                    (
+                        deco.lineno,
+                        f"R3 @{name}(...) first argument must be a string "
+                        "literal (grep-able registry key)",
+                    )
+                )
+                continue
+            key = (name, deco.args[0].value)
+            if key in seen:
+                prev = seen[key]
+                out.append(
+                    (
+                        deco.lineno,
+                        f"R3 duplicate registration @{name}"
+                        f"({deco.args[0].value!r}) — first registered at "
+                        f"{prev}",
+                    )
+                )
+            else:
+                seen[key] = f"{_rel(path)}:{deco.lineno}"
+    return out
+
+
+def main(argv=None) -> int:
+    findings: List[str] = []
+    registry_seen: dict = {}
+    for path in _py_files(*_SCAN_ROOTS):
+        try:
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+        except SyntaxError as e:
+            findings.append(f"{_rel(path)}:{e.lineno or 0}: unparseable: {e.msg}")
+            continue
+        hits = check_private_imports(path, tree)
+        hits += check_registry_decorators(path, tree, registry_seen)
+        rel = _rel(path)
+        if rel.split(os.sep)[0] in _RANDOMNESS_ROOTS:
+            hits += check_randomness(path, tree)
+        findings.extend(f"{rel}:{line}: {msg}" for line, msg in sorted(hits))
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"\n{len(findings)} invariant violation(s)", file=sys.stderr)
+        return 1
+    print("invariants OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
