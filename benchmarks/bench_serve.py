@@ -45,22 +45,31 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.api import Topology, distribute
-from repro.serve import SparseServeEngine, percentile
+from repro.serve import SparseServeEngine, Status, percentile
 from repro.sparse.generate import banded_coo
 
-__all__ = ["run_mix", "main"]
+__all__ = ["run_fairness", "run_mix", "main"]
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 FULL_CONFIG = {"n": 4096, "nnz": 80_000, "topology": (2, 2), "block": 16,
-               "batch_slots": 8, "requests": 64, "iters": 20, "rate_x": 3.0}
+               "batch_slots": 8, "requests": 64, "iters": 20, "rate_x": 3.0,
+               "fair_flood": 24, "fair_victim": 2}
 QUICK_CONFIG = {"n": 1024, "nnz": 16_000, "topology": (2, 2), "block": 16,
-                "batch_slots": 4, "requests": 16, "iters": 10, "rate_x": 2.0}
+                "batch_slots": 4, "requests": 16, "iters": 10, "rate_x": 2.0,
+                "fair_flood": 12, "fair_victim": 1}
 
 # Acceptance floor for the committed full run (ISSUE 6): batched
 # throughput ≥ 2× sequential at batch_slots=8. The CI --quick gate only
 # requires ≥ 1× (tiny trace, shared runners).
 FULL_MIN_SPEEDUP = 2.0
+
+# Fairness acceptance (ISSUE 10): under a 4-tenant skew (one tenant
+# flooding), the non-flooding tenants' p99 latency must stay within
+# this factor of their isolated baseline, and they must keep making
+# their SLA (goodput) while the flood is absorbed.
+FAIR_MAX_P99_RATIO = 2.0
+FAIR_MIN_GOODPUT = 0.9
 
 # Tenant mixes: (graph, solver) workload compositions. Two graphs model
 # two tenants' datasets; solvers mirror the request types the engine
@@ -227,6 +236,112 @@ def _run_sequential(sessions: Dict, trace: List[Dict], cfg: Dict) -> Dict:
     }
 
 
+class _TickClock:
+    """Virtual clock advanced one unit per engine tick — fairness is a
+    *scheduling* property, so measuring latency in deterministic ticks
+    removes machine noise from the p99 ratios entirely."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _play_ticked(sessions: Dict, cfg: Dict, entries) -> Dict[str, List[float]]:
+    """Submit ``(tenant, logical, timeout)`` entries up front, tick to
+    drain on a virtual clock, and return per-logical-tenant latencies in
+    ticks (``inf`` for requests that expired instead of finishing).
+    ``tenant`` is what the engine sees; ``logical`` is the accounting
+    bucket, so a FIFO baseline can submit everyone under one shared id
+    while we still attribute latencies to the original tenants."""
+    clk = _TickClock()
+    eng = SparseServeEngine(
+        batch_slots=cfg["batch_slots"], max_queue=len(entries) + 1,
+        default_iters=cfg["iters"], clock=clk,
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(7)
+    tickets = []
+    for tenant, _, timeout in entries:
+        tickets.append(eng.submit(
+            "g1", "pagerank", payload=_payload("pagerank", cfg["n"], rng),
+            tenant=tenant, timeout=timeout,
+        ))
+    while eng.pending():
+        eng.step()
+        clk.t += 1.0
+    lats: Dict[str, List[float]] = {}
+    for t, (_, logical, _) in zip(tickets, entries):
+        done = t.status is Status.DONE
+        lats.setdefault(logical, []).append(
+            (t.t_finish - t.t_submit) if done else float("inf")
+        )
+    return eng, lats
+
+
+def run_fairness(sessions: Dict, cfg: Dict) -> Dict:
+    """The 4-tenant skew scenario: one tenant floods a burst while three
+    victims submit small deadline-bound workloads on the same lane.
+
+    Three deterministic plays of the same traffic: each victim
+    *isolated* (its p99 baseline), everything through one *FIFO* queue
+    (a single shared tenant id — the pre-fairness engine, victims stuck
+    behind the whole flood), and *fair* per-tenant scheduling with the
+    SLA as a hard deadline on victim requests. Reports worst-victim p99
+    ratios vs isolated and per-tenant goodput; the engine's own
+    per-tenant metrics for the fair run land in the JSON verbatim."""
+    victims = ["v1", "v2", "v3"]
+    flood_n, per_victim = cfg["fair_flood"], cfg["fair_victim"]
+
+    iso = {}
+    for v in victims:
+        _, lats = _play_ticked(sessions, cfg, [(v, v, None)] * per_victim)
+        iso[v] = percentile(lats[v], 99.0)
+    iso_worst = max(iso.values())
+    sla_ticks = FAIR_MAX_P99_RATIO * iso_worst
+
+    fifo_entries = [("shared", "flood", None)] * flood_n
+    for _ in range(per_victim):
+        fifo_entries += [("shared", v, None) for v in victims]
+    _, fifo_lats = _play_ticked(sessions, cfg, fifo_entries)
+
+    fair_entries = [("flood", "flood", None)] * flood_n
+    for _ in range(per_victim):
+        fair_entries += [(v, v, sla_ticks) for v in victims]
+    fair_eng, fair_lats = _play_ticked(sessions, cfg, fair_entries)
+
+    def victim_p99(lats):
+        return max(percentile(lats[v], 99.0) for v in victims)
+
+    def victim_goodput(lats):
+        """Soft SLA accounting from latencies (works for the FIFO play,
+        where deadlines can't be armed without EDF reordering them)."""
+        hits = [lat <= sla_ticks for v in victims for lat in lats[v]]
+        return sum(hits) / len(hits)
+
+    snap = fair_eng.metrics.snapshot()
+    out = {
+        "victims": victims,
+        "flood_requests": flood_n,
+        "victim_requests": per_victim * len(victims),
+        "sla_ticks": sla_ticks,
+        "isolated_victim_p99_ticks": iso_worst,
+        "fifo": {
+            "victim_p99_ticks": victim_p99(fifo_lats),
+            "p99_ratio_vs_isolated": round(victim_p99(fifo_lats) / iso_worst, 2),
+            "victim_goodput": victim_goodput(fifo_lats),
+        },
+        "fair": {
+            "victim_p99_ticks": victim_p99(fair_lats),
+            "p99_ratio_vs_isolated": round(victim_p99(fair_lats) / iso_worst, 2),
+            "victim_goodput": victim_goodput(fair_lats),
+            "tenants": snap["tenants"],  # engine-side per-tenant goodput
+        },
+    }
+    return out
+
+
 def run_mix(sessions: Dict, mix_name: str, cfg: Dict, svc_s: float) -> Dict:
     rate = cfg["rate_x"] / max(svc_s, 1e-6)
     trace = _trace(cfg, mix_name, rate, np.random.default_rng(42))
@@ -259,6 +374,13 @@ def run(cfg: Dict, write: bool) -> Dict:
               f"occ={b['occupancy']:.2f} | sequential "
               f"p50={s['p50_s'] * 1e3:.1f}ms p99={s['p99_s'] * 1e3:.1f}ms "
               f"{s['throughput_rps']:.1f} req/s | speedup {res['speedup']}x")
+    fair = run_fairness(sessions, cfg)
+    doc["fairness"] = fair
+    print(f"fairness: isolated victim p99={fair['isolated_victim_p99_ticks']:.0f} "
+          f"ticks | fifo {fair['fifo']['p99_ratio_vs_isolated']}x "
+          f"goodput={fair['fifo']['victim_goodput']:.2f} | fair "
+          f"{fair['fair']['p99_ratio_vs_isolated']}x "
+          f"goodput={fair['fair']['victim_goodput']:.2f}")
     if write:
         with open(BENCH_PATH, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
@@ -278,6 +400,23 @@ def main(argv: List[str] | None = None) -> int:
                   f"{worst:.2f}x below the {floor:.1f}x floor")
             return 1
         print(f"OK: every mix >= {floor:.1f}x sequential (worst {worst:.2f}x)")
+        fair = doc["fairness"]
+        ratio = fair["fair"]["p99_ratio_vs_isolated"]
+        goodput = fair["fair"]["victim_goodput"]
+        if ratio > FAIR_MAX_P99_RATIO:
+            print(f"FAIL: fair victim p99 {ratio}x isolated "
+                  f"(> {FAIR_MAX_P99_RATIO}x)")
+            return 1
+        if goodput < FAIR_MIN_GOODPUT:
+            print(f"FAIL: fair victim goodput {goodput:.2f} "
+                  f"(< {FAIR_MIN_GOODPUT})")
+            return 1
+        if ratio > fair["fifo"]["p99_ratio_vs_isolated"]:
+            print("FAIL: fair scheduling no better than FIFO for victims")
+            return 1
+        print(f"OK: victims under flood hold p99 {ratio}x isolated "
+              f"(fifo {fair['fifo']['p99_ratio_vs_isolated']}x), "
+              f"goodput {goodput:.2f}")
     return 0
 
 

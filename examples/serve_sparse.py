@@ -1,7 +1,9 @@
 """Multi-tenant sparse-solve serving demo: two tenants' graphs behind
-one :class:`repro.serve.SparseServeEngine`, mixed personalized-PageRank
-/ Jacobi / SpMV traffic batched continuously onto shared SpMMs, with
-admission control and per-request deadlines on display.
+one :class:`repro.serve.SparseServeEngine` driven by a background
+:class:`repro.serve.ServeDriver` thread, mixed personalized-PageRank /
+Jacobi / SpMV traffic batched continuously onto shared SpMMs, with
+weighted fair queueing, per-tenant quotas, and SLA deadlines on
+display.
 
     PYTHONPATH=src python examples/serve_sparse.py --requests 24 --slots 4
 """
@@ -13,7 +15,13 @@ import time
 import numpy as np
 
 from repro.api import Topology, distribute, set_memo_limit
-from repro.serve import QueueFullError, SparseServeEngine, Status
+from repro.serve import (
+    QueueFullError,
+    ServeDriver,
+    SparseServeEngine,
+    Status,
+    TenantQuotaError,
+)
 from repro.sparse.formats import COO
 from repro.sparse.generate import banded_coo
 
@@ -51,9 +59,13 @@ def main() -> None:
         path_b = os.path.join(store, "tenant-b.npz")
         sess_b.save(path_b)
 
+        # Tenant "a" pays for a 2x share; both are quota-bounded so one
+        # misbehaving client cannot consume the whole admission queue.
         eng = SparseServeEngine(
             batch_slots=args.slots, max_queue=args.max_queue,
             default_iters=15,
+            tenant_quota=max(4, args.max_queue // 2),
+            tenant_weights={"a": 2.0},
         )
         eng.register_graph("tenant-a/web", sess_a)
         eng.register_graph("tenant-b/road", path_b)
@@ -61,22 +73,23 @@ def main() -> None:
         rng = np.random.default_rng(0)
         tickets, shed = [], 0
         kinds = (
-            ("tenant-a/web", "pagerank", lambda: {"seeds": rng.random(args.n).astype(np.float32)}),
-            ("tenant-b/road", "jacobi", lambda: {"b": rng.random(args.n).astype(np.float32)}),
-            ("tenant-a/web", "spmv", lambda: {"x": rng.random(args.n).astype(np.float32)}),
+            ("a", "tenant-a/web", "pagerank", lambda: {"seeds": rng.random(args.n).astype(np.float32)}),
+            ("b", "tenant-b/road", "jacobi", lambda: {"b": rng.random(args.n).astype(np.float32)}),
+            ("a", "tenant-a/web", "spmv", lambda: {"x": rng.random(args.n).astype(np.float32)}),
         )
         t0 = time.perf_counter()
-        for i in range(args.requests):
-            graph, solver, make = kinds[i % len(kinds)]
-            try:
-                tickets.append(
-                    eng.submit(graph, solver, payload=make(), timeout=30.0)
-                )
-            except QueueFullError:
-                shed += 1  # typed load shedding: client backs off
-            if i % 3 == 2:
-                eng.step()  # interleave ticks with arrivals
-        eng.run_until_drained()
+        # The driver thread owns the tick loop; the main thread just
+        # submits. On exit the context manager drains, then stops.
+        with ServeDriver(eng):
+            for i in range(args.requests):
+                tenant, graph, solver, make = kinds[i % len(kinds)]
+                try:
+                    tickets.append(
+                        eng.submit(graph, solver, payload=make(),
+                                   timeout=30.0, tenant=tenant)
+                    )
+                except (QueueFullError, TenantQuotaError):
+                    shed += 1  # typed load shedding: client backs off
         dt = time.perf_counter() - t0
 
     done = sum(t.status is Status.DONE for t in tickets)
@@ -88,6 +101,10 @@ def main() -> None:
           f"(occupancy {snap['occupancy']:.2f})")
     print(f"latency p50={snap['total_p50_s'] * 1e3:.1f}ms "
           f"p99={snap['total_p99_s'] * 1e3:.1f}ms")
+    for name, tm in sorted(snap.get("tenants", {}).items()):
+        print(f"tenant {name!r}: completed={tm['completed']} "
+              f"goodput={tm['goodput']} "
+              f"wait_p99={tm['wait_p99_s'] * 1e3:.1f}ms")
     sample = next(t for t in tickets if t.status is Status.DONE)
     print(f"sample ticket #{sample.tid}: {sample.solver} on "
           f"{sample.graph!r}, {sample.result.iters_run} iters, "

@@ -12,7 +12,8 @@ Two axes of scale on top of the basic drivers:
 
 * **Batching** — ``block_power_iteration`` (QR re-orthonormalized
   subspace iteration), multi-source ``pagerank`` (``seeds=[B, N]``, one
-  personalization vector per user), and ``jacobi`` with ``b=[B, N]``
+  personalization vector per user), and ``jacobi``/``cg`` with
+  ``b=[B, N]``
   drive B right-hand sides through one SpMM per iteration: one exchange
   carries the whole batch, amortizing the scatter/gather phases the
   paper measures in ch.4.
@@ -476,6 +477,69 @@ def pagerank(
     )
 
 
+def _row_dot(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Per-row dot product of two ``[B, N]`` blocks, accumulated in
+    float64 — a pure ``axis=-1`` reduction, so each row's value is
+    independent of every other row and of the batch width B. This is
+    what lets CG's two dots per iteration ride the slot-batched serving
+    path with the bitwise engine-vs-direct guarantee."""
+    return (a.astype(np.float64) * b.astype(np.float64)).sum(axis=-1)
+
+
+def _cg_advance(session, z, r, p, rs):
+    """One batched CG iteration over ``[B, N]`` state; per-row
+    arithmetic only (batched SpMM + ``axis=-1`` dots + row selects).
+
+    Breakdown (``|pᵀAp| < 1e-30``, e.g. an exactly-solved or zero
+    right-hand side) freezes that row — state and residual stay
+    constant while the budget runs out — instead of breaking the whole
+    batch the way the legacy 1-D driver does; the other rows are
+    unaffected. Returns ``(z, r, p, rs, resid)`` with ``resid = √rs``
+    per row (float64)."""
+    ap = session.spmv(p)
+    denom = _row_dot(p, ap)
+    ok = np.abs(denom) >= 1e-30
+    alpha = np.where(ok, rs / np.where(ok, denom, 1.0), 0.0)
+    z_new = (z + alpha[:, None] * p).astype(np.float32)
+    r_new = (r - alpha[:, None] * ap).astype(np.float32)
+    rs_new = _row_dot(r_new, r_new)
+    beta = rs_new / np.maximum(rs, 1e-30)
+    p_new = (r_new + beta[:, None] * p).astype(np.float32)
+    sel = ok[:, None]
+    z = np.where(sel, z_new, z)
+    r = np.where(sel, r_new, r)
+    p = np.where(sel, p_new, p)
+    rs = np.where(ok, rs_new, rs)
+    return z, r, p, rs, np.sqrt(rs)
+
+
+def _cg_batched(session, bv, iters, tol) -> SolveResult:
+    """Batched CG over ``b=[B, N]`` — shares :func:`_cg_advance` with
+    the serving stepper verbatim, so a direct batched solve and an
+    engine slot produce bitwise-identical trajectories. One residual
+    entry per iteration (max 2-norm over the batch; no initial-residual
+    entry, matching the other batched drivers)."""
+    z = np.zeros_like(bv)
+    r = bv - session.spmv(z)
+    p = r.copy()
+    rs = _row_dot(r, r)
+    residuals: List[float] = []
+    k = 0
+    for k in range(1, iters + 1):  # noqa: B007 — k reported after the loop
+        z, r, p, rs, resid = _cg_advance(session, z, r, p, rs)
+        residuals.append(float(resid.max()))
+        if tol and residuals[-1] < tol:
+            break
+    return _result(
+        "cg",
+        z,
+        residuals[-1] if residuals else 0.0,
+        residuals,
+        k,
+        bool(tol and residuals and residuals[-1] < tol),
+    )
+
+
 @register_solver("cg")
 def conjugate_gradient(
     session: "SparseSession",
@@ -485,10 +549,20 @@ def conjugate_gradient(
     b: Optional[np.ndarray] = None,
 ) -> SolveResult:
     """Conjugate gradient for SPD A (the suite's SPD matrices);
-    residual = ‖b − Az‖₂. Stops without ``converged`` on the breakdown
-    branch (search-direction curvature ``pᵀAp ≈ 0``)."""
+    residual = ‖b − Az‖₂.
+
+    ``b=[N]`` is the legacy single-vector driver: it logs the initial
+    residual before iterating and stops without ``converged`` on the
+    breakdown branch (search-direction curvature ``pᵀAp ≈ 0``).
+    ``b=[B, N]`` sweeps the batch with one SpMM and two ``axis=-1``
+    dots per iteration (:func:`_cg_advance` — the same arithmetic the
+    serving engine's ``cg`` stepper runs, bitwise); breakdown there
+    freezes only the affected row.
+    """
     n = session.matrix.shape[0]
     bv = np.ones(n, np.float32) if b is None else np.asarray(b, np.float32)
+    if bv.ndim == 2:
+        return _cg_batched(session, bv, iters, tol)
     z = np.zeros(n, np.float32)
     r = bv - session.spmv(z)
     p = r.copy()
@@ -716,6 +790,56 @@ class _SpmvStepper(BatchStepper):
         return self.y[slot].copy()
 
 
+class _CgStepper(BatchStepper):
+    """Slot-batched conjugate gradient: one shared SpMM (A·P) plus two
+    ``axis=-1`` dot reductions per iteration drive B independent SPD
+    solves.
+
+    Each slot advances through :func:`_cg_advance` — literally the
+    function the batched host driver loops — so a slot's (z, r, p, rs)
+    trajectory is bitwise a direct batched-of-1 ``solve("cg",
+    b=b[None])``. The per-row float64 ``rs`` rides the generic ndarray
+    snapshot/restore like every other state block, so CG lanes recover
+    bitwise through the engine's fault path too. A slot that breaks
+    down (``pᵀAp ≈ 0``) freezes at its solution and burns its budget,
+    same as the host batch.
+    """
+
+    solver = "cg"
+
+    def __init__(self, session, slots):
+        super().__init__(session, slots)
+        self.z = np.zeros((self.slots, self.n), np.float32)
+        self.r = np.zeros((self.slots, self.n), np.float32)
+        self.p = np.zeros((self.slots, self.n), np.float32)
+        self.rs = np.zeros(self.slots, np.float64)
+        self._zero_y = session.spmv(np.zeros((1, self.n), np.float32))[0]
+
+    def load(self, slot, *, b=None):
+        bv = np.ones(self.n, np.float32) if b is None else np.asarray(b, np.float32)
+        if bv.shape != (self.n,):
+            raise ValueError(f"b must be [N={self.n}], got {bv.shape}")
+        r0 = bv - self._zero_y
+        self.z[slot] = 0.0
+        self.r[slot] = r0
+        self.p[slot] = r0
+        self.rs[slot] = _row_dot(r0[None, :], r0[None, :])[0]
+
+    def step(self, active):
+        z, r, p, rs, resid = _cg_advance(
+            self.session, self.z, self.r, self.p, self.rs
+        )
+        sel = active[:, None]
+        self.z = np.where(sel, z, self.z)
+        self.r = np.where(sel, r, self.r)
+        self.p = np.where(sel, p, self.p)
+        self.rs = np.where(active, rs, self.rs)
+        return resid
+
+    def extract(self, slot):
+        return self.z[slot].copy()
+
+
 @register_stepper("pagerank")
 def pagerank_stepper(
     session: "SparseSession", slots: int, *, damping: float = 0.85,
@@ -732,3 +856,8 @@ def jacobi_stepper(session: "SparseSession", slots: int) -> BatchStepper:
 @register_stepper("spmv")
 def spmv_stepper(session: "SparseSession", slots: int) -> BatchStepper:
     return _SpmvStepper(session, slots)
+
+
+@register_stepper("cg")
+def cg_stepper(session: "SparseSession", slots: int) -> BatchStepper:
+    return _CgStepper(session, slots)

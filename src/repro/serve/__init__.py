@@ -1,12 +1,15 @@
 """Serving layer: wave-batched LM decoding (:mod:`repro.serve.engine`)
 and continuous-batched multi-tenant sparse solving
-(:mod:`repro.serve.sparse`)."""
+(:mod:`repro.serve.sparse`), driven by a background tick thread
+(:mod:`repro.serve.driver`)."""
+from repro.serve.driver import ServeDriver
 from repro.serve.engine import Request, ServeEngine, greedy_generate
-from repro.serve.metrics import ServeMetrics, percentile
+from repro.serve.metrics import ServeMetrics, TenantMetrics, percentile
 from repro.serve.sparse import (
     QueueFullError,
     SparseServeEngine,
     Status,
+    TenantQuotaError,
     Ticket,
 )
 
@@ -14,9 +17,12 @@ __all__ = [
     "Request",
     "ServeEngine",
     "greedy_generate",
+    "ServeDriver",
     "ServeMetrics",
+    "TenantMetrics",
     "percentile",
     "QueueFullError",
+    "TenantQuotaError",
     "SparseServeEngine",
     "Status",
     "Ticket",

@@ -2,12 +2,13 @@
 
 The PR 5 plan store made planned sessions cheap to ship and re-open;
 this module puts them behind a request interface. Tenants submit solves
-(``pagerank(seeds=...)`` per user, ``jacobi`` right-hand sides, raw
-``spmv``) against *named registered graphs*; the engine packs requests
-that share a ``(graph, solver, config)`` key onto one slot-batched
-stepper (:class:`repro.api.BatchStepper`) so B tenants ride a single
-B-wide SpMM per iteration — the batching win the thesis measures for
-multiple right-hand sides, applied across users instead of within one.
+(``pagerank(seeds=...)`` per user, ``jacobi``/``cg`` right-hand sides,
+raw ``spmv``) against *named registered graphs*; the engine packs
+requests that share a ``(graph, solver, config)`` key onto one
+slot-batched stepper (:class:`repro.api.BatchStepper`) so B tenants
+ride a single B-wide SpMM per iteration — the batching win the thesis
+measures for multiple right-hand sides, applied across users instead of
+within one.
 
 **Continuous batching.** Unlike the LM :class:`~repro.serve.engine.ServeEngine`
 (wave admission: new prompts enter only when the whole wave drains), a
@@ -24,14 +25,45 @@ freezing), so serving through the engine changes *scheduling*, never
 *results* — ``tests/test_serve_sparse.py`` pins this for every
 registered stepper.
 
-**Admission control.** The queue is bounded: ``submit`` past
-``max_queue`` waiting requests raises :class:`QueueFullError` (typed
-load shedding — the caller sheds or retries, the engine never builds an
-unbounded backlog). Each request may carry a ``timeout``; its deadline
-is enforced both while queued and between iterations, moving the ticket
-to ``EXPIRED`` cleanly (slot freed, engine keeps running). Bad payloads
-(wrong shape, zero seed mass, zero diagonal) fail only their own ticket
-(``FAILED`` + ``ticket.error``), never the engine.
+**Admission control.** Requests carry a ``tenant`` id. The queue is
+bounded two ways: past ``max_queue`` total waiting requests ``submit``
+raises :class:`QueueFullError`, and past ``tenant_quota`` waiting
+requests *from one tenant* it raises :class:`TenantQuotaError` — typed
+load shedding either way, but the caller can tell "the engine is full"
+from "you are over your share". Already-expired queued tickets are
+swept before either bound is checked, so a burst of short-timeout
+requests can never fill the queue with corpses. Each request may carry
+a ``timeout``; its deadline is enforced while queued and between
+iterations, moving the ticket to ``EXPIRED`` cleanly (slot freed,
+engine keeps running). Bad payloads (wrong shape, zero seed mass, zero
+diagonal) fail only their own ticket (``FAILED`` + ``ticket.error``),
+never the engine.
+
+**Fair, SLA-aware refill.** Free slots are granted by deficit-weighted
+fair queueing *across tenants*: each admission charges the tenant
+``1/weight`` of normalized service (``tenant_weights``, default 1.0)
+and every free slot goes to the least-served backlogged tenant, ties
+rotating past the last tenant granted a slot — so one flooding tenant
+cannot starve the rest, and a weight-2 tenant really gets twice the
+slots even when they free one at a time. *Within* a tenant's share,
+candidates go earliest-deadline-first; deadline-less tickets keep FIFO
+order behind deadlined ones. A candidate whose lane is full is skipped
+without blocking candidates bound for other lanes (no head-of-line
+blocking). Runtime-system-style scheduling of pipelined sparse work
+(Agullo et al., *Pipelining the FMM over a Runtime System*) is the
+model: the scheduler, not the caller, decides priority — and with
+:class:`~repro.serve.driver.ServeDriver`, cadence too: a driver thread
+owns :meth:`step` so clients just ``submit()`` and ``Ticket.wait()``.
+All engine entry points take an internal lock, so submissions may race
+the driver's ticks freely; ticket completion events fire only after a
+guarded tick body commits, so a mid-tick recovery rollback can never
+un-finish a ticket a waiter already observed.
+
+**Tolerance semantics** are explicit: ``tol=None`` (the default) means
+no early exit — the budget runs out; ``tol=0.0`` means *exact-zero
+residual*; ``tol>0`` stops at the first iteration whose residual drops
+strictly below it (matching the host drivers). The ``converged`` flag
+follows the same rule.
 
 Sessions hydrate lazily through :func:`repro.api.plancache.hydrate_session`
 when a graph is registered by path, so the warm pool of materialized
@@ -55,15 +87,16 @@ points (inside ``step``, ``update_graph``, and — via
 ``save_generation``'s ``before_commit`` — mid-checkpoint); every
 guarded body runs against a snapshot of all mutable scheduler state
 (stepper arrays, slot occupancy, ticket lifecycle fields, queue order,
-metrics), so recovery = restore snapshot → reload each laned graph from
-its last good generation + journal → remap the plan's per-unit shards
-onto the survivor mesh (:func:`repro.runtime.elastic.elastic_restart`)
-→ rebind steppers with their saved state → rerun the body. Steppers
-are deterministic, so the recovered trajectory is bitwise the
-uninterrupted one — no ticket is lost, duplicated, or double-counted.
-A ``heartbeat`` detects units that die *between* ticks, and a
-``latency_probe`` + per-unit :class:`~repro.runtime.fault.StragglerMonitor`
-demotes persistently slow units through the same recovery path.
+tenant deficits, metrics), so recovery = restore snapshot → reload each
+laned graph from its last good generation + journal → remap the plan's
+per-unit shards onto the survivor mesh
+(:func:`repro.runtime.elastic.elastic_restart`) → rebind steppers with
+their saved state → rerun the body. Steppers are deterministic, so the
+recovered trajectory is bitwise the uninterrupted one — no ticket is
+lost, duplicated, or double-counted. A ``heartbeat`` detects units
+that die *between* ticks, and a ``latency_probe`` + per-unit
+:class:`~repro.runtime.fault.StragglerMonitor` demotes persistently
+slow units through the same recovery path.
 """
 from __future__ import annotations
 
@@ -71,6 +104,7 @@ import collections
 import copy
 import dataclasses
 import enum
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -95,7 +129,35 @@ from repro.runtime.fault import (
 from repro.serve.metrics import ServeMetrics
 from repro.sparse.delta import SparseDelta
 
-__all__ = ["QueueFullError", "SparseServeEngine", "Status", "Ticket"]
+__all__ = [
+    "QueueFullError",
+    "SparseServeEngine",
+    "Status",
+    "TenantQuotaError",
+    "Ticket",
+]
+
+# submit(tol=...) default marker: distinguishes "use the engine default"
+# from an explicit tol=None ("no early exit").
+_UNSET = object()
+
+
+
+def _hit_tol(tol: Optional[float], res: float) -> bool:
+    """The engine's explicit tolerance contract: ``None`` never stops
+    early, ``0.0`` stops on an exact-zero residual, positive stops
+    strictly below (the host drivers' convention)."""
+    if tol is None:
+        return False
+    return res < tol if tol > 0.0 else res == 0.0
+
+
+def _edf_key(ticket: "Ticket") -> Tuple[bool, float, int]:
+    """Within-tenant dispatch order: earliest deadline first;
+    deadline-less tickets keep submission (FIFO) order behind every
+    deadlined one."""
+    has_none = ticket.deadline is None
+    return (has_none, 0.0 if has_none else ticket.deadline, ticket.tid)
 
 
 class QueueFullError(RuntimeError):
@@ -111,6 +173,21 @@ class QueueFullError(RuntimeError):
         self.max_queue = max_queue
 
 
+class TenantQuotaError(RuntimeError):
+    """Typed per-tenant load-shed: ``tenant`` already has ``quota``
+    waiting requests. Distinct from :class:`QueueFullError` so a caller
+    can tell "the engine is full" (back off globally) from "you are
+    over your share" (the engine still has room for everyone else)."""
+
+    def __init__(self, tenant: str, quota: int):
+        super().__init__(
+            f"tenant {tenant!r} is at its queue quota "
+            f"({quota} waiting requests); shed or retry"
+        )
+        self.tenant = tenant
+        self.quota = quota
+
+
 class Status(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
@@ -119,14 +196,19 @@ class Status(enum.Enum):
     FAILED = "failed"  # per-ticket error (bad payload / solver config)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Ticket:
     """One request's handle; the engine mutates it through the lifecycle.
 
     ``result`` is a :class:`SolveResult` once ``status is Status.DONE``
     — field-for-field what the direct ``session.solve`` call would have
     returned. ``error`` carries the failure text for ``FAILED``
-    tickets."""
+    tickets. ``wait()`` blocks until the ticket reaches a terminal
+    status (how a client sleeps on a driver-run engine; the event fires
+    only after the tick that finished it commits, so a waiter can never
+    observe a result a recovery rollback then withdraws). Identity
+    semantics (``eq=False``): two tickets are never "equal", they are
+    the same request or not."""
 
     tid: int
     graph: str
@@ -134,18 +216,33 @@ class Ticket:
     payload: Dict[str, np.ndarray]
     config: Tuple[Tuple[str, object], ...]
     iters: int
-    tol: float
+    tol: Optional[float]
     deadline: Optional[float]
+    tenant: str = "default"
     status: Status = Status.QUEUED
     result: Optional[SolveResult] = None
     error: Optional[str] = None
     t_submit: float = 0.0
     t_start: Optional[float] = None
     t_finish: Optional[float] = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False
+    )
 
     @property
     def lane_key(self) -> Tuple[str, str, Tuple]:
         return (self.graph, self.solver, self.config)
+
+    @property
+    def terminal(self) -> bool:
+        return self.status not in (Status.QUEUED, Status.RUNNING)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the ticket is terminal (DONE/EXPIRED/FAILED);
+        returns ``False`` on timeout. Requires something to be ticking
+        the engine — a :class:`~repro.serve.driver.ServeDriver` or a
+        caller-driven loop on another thread."""
+        return self._event.wait(timeout)
 
 
 class _Lane:
@@ -179,8 +276,16 @@ class _Lane:
         self.residuals[slot] = []
 
     def retire(self, slot: int) -> None:
+        """Return ``slot`` to the free pool, resetting every per-slot
+        bookkeeping field to its vacant state. Idempotent by
+        construction — retiring a never-loaded (or already-retired)
+        slot rewrites the vacant state it already has — so the failed
+        ``load`` path may call it unconditionally."""
         self.tickets[slot] = None
         self.active[slot] = False
+        self.iters_done[slot] = 0
+        self.budget[slot] = 0
+        self.residuals[slot] = []
 
 
 class SparseServeEngine:
@@ -188,17 +293,19 @@ class SparseServeEngine:
 
     ``batch_slots`` sizes every lane's stepper (the B of the shared
     SpMM); ``max_queue`` bounds *waiting* admissions (running slots
-    don't count); ``default_iters`` / ``default_tol`` apply when a
-    request doesn't override them. ``executor`` overrides the executor
-    of hydrated/registered sessions; ``clock`` is injectable (tests
-    drive deadlines with a fake clock; production uses
-    ``time.monotonic``).
+    don't count) and ``tenant_quota`` bounds one tenant's share of them;
+    ``tenant_weights`` skews the refill round-robin (default weight
+    1.0). ``default_iters`` / ``default_tol`` apply when a request
+    doesn't override them (``default_tol=None``: no early exit).
+    ``executor`` overrides the executor of hydrated/registered
+    sessions; ``clock`` is injectable (tests drive deadlines with a
+    fake clock; production uses ``time.monotonic``).
 
-    Single-threaded by design: ``submit`` enqueues, :meth:`step` runs
-    one scheduling tick (expire → refill → iterate each lane once), and
-    :meth:`run_until_drained` ticks until no work remains. A driver
-    thread or async loop owns the cadence; the engine itself never
-    blocks.
+    Thread-safe by locking: every public entry point (``submit``,
+    :meth:`step`, ``pending``, graph updates) takes one internal RLock,
+    so a :class:`~repro.serve.driver.ServeDriver` thread can own the
+    tick cadence while request threads ``submit()`` and ``wait()`` on
+    tickets. The engine itself never blocks beyond one tick.
 
     Fault-tolerance wiring (all optional, zero overhead when absent):
     ``fault_injector`` schedules :class:`WorkerFailure` at engine fault
@@ -218,8 +325,10 @@ class SparseServeEngine:
         *,
         batch_slots: int = 8,
         max_queue: int = 64,
+        tenant_quota: Optional[int] = None,
+        tenant_weights: Optional[Dict[str, float]] = None,
         default_iters: int = 50,
-        default_tol: float = 0.0,
+        default_tol: Optional[float] = None,
         executor: Optional[str] = None,
         clock=time.monotonic,
         fault_injector: Optional[FaultInjector] = None,
@@ -234,17 +343,39 @@ class SparseServeEngine:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if tenant_quota is not None and tenant_quota < 1:
+            raise ValueError(f"tenant_quota must be >= 1, got {tenant_quota}")
+        if tenant_weights and any(w <= 0.0 for w in tenant_weights.values()):
+            raise ValueError("tenant_weights must all be > 0")
+        if default_tol is not None and default_tol < 0.0:
+            raise ValueError(f"default_tol must be >= 0 or None, got {default_tol}")
         self.batch_slots = int(batch_slots)
         self.max_queue = int(max_queue)
+        self.tenant_quota = None if tenant_quota is None else int(tenant_quota)
+        self.tenant_weights = dict(tenant_weights or {})
         self.default_iters = int(default_iters)
-        self.default_tol = float(default_tol)
+        self.default_tol = None if default_tol is None else float(default_tol)
         self.executor = executor
         self.clock = clock
         self.metrics = ServeMetrics()
         self._graphs: Dict[str, Union[str, SparseSession]] = {}
-        self._queue: "collections.deque[Ticket]" = collections.deque()
+        # Admission state: one FIFO deque per tenant (only tenants with
+        # waiting work have an entry), normalized-service counters for
+        # the deficit scheduler (each admission charges 1/weight; the
+        # largest-deficit = least-served tenant admits first), and the
+        # rotation cursor that breaks exact ties (last tenant granted a
+        # slot goes to the back of the line).
+        self._queues: Dict[str, "collections.deque[Ticket]"] = {}
+        self._served: Dict[str, float] = {}
+        self._rr_last: Optional[str] = None
         self._lanes: Dict[Tuple, _Lane] = {}
         self._next_tid = 0
+        # -- threading: one lock for all scheduler state; an event the
+        # driver sleeps on when idle (set by submit); completion events
+        # deferred until the guarded tick body commits.
+        self._lock = threading.RLock()
+        self._work_event = threading.Event()
+        self._pending_events: List[Ticket] = []
         # -- fault tolerance state
         self.fault_injector = fault_injector
         self.heartbeat = heartbeat
@@ -278,7 +409,8 @@ class SparseServeEngine:
                 f"source must be a SparseSession or a plan path, got "
                 f"{type(source).__name__}"
             )
-        self._graphs[name] = source
+        with self._lock:
+            self._graphs[name] = source
 
     def graphs(self) -> List[str]:
         return sorted(self._graphs)
@@ -331,7 +463,8 @@ class SparseServeEngine:
             self._graphs[name] = new
             return new.update_report
 
-        return self._guard(body)
+        with self._lock:
+            return self._guard(body)
 
     def checkpoint_graph(self, name: str) -> int:
         """Commit graph ``name``'s current plan as a new generation.
@@ -359,7 +492,8 @@ class SparseServeEngine:
             self._graph_gens[name] = gen
             return gen
 
-        return self._guard(body)
+        with self._lock:
+            return self._guard(body)
 
     # -- fault handling ----------------------------------------------------
 
@@ -403,7 +537,7 @@ class SparseServeEngine:
         """Capture every piece of state a guarded body may mutate.
 
         Tickets are captured by identity (they are mutable dataclasses
-        shared between the queue, lanes, and callers' hands — callers
+        shared between the queues, lanes, and callers' hands — callers
         must observe the rolled-back lifecycle, so we restore fields in
         place rather than swap objects)."""
         tickets: Dict[int, tuple] = {}
@@ -427,10 +561,14 @@ class SparseServeEngine:
                 lane.budget.copy(),
                 [list(r) for r in lane.residuals],
             )
-        for t in self._queue:
-            cap(t)
+        for q in self._queues.values():
+            for t in q:
+                cap(t)
         return {
-            "queue": list(self._queue),
+            "queues": {tenant: list(q) for tenant, q in self._queues.items()},
+            "served": dict(self._served),
+            "rr_last": self._rr_last,
+            "pending_events": list(self._pending_events),
             "tickets": tickets,
             "lanes": lanes,
             "metrics": copy.deepcopy(self.metrics),
@@ -438,7 +576,12 @@ class SparseServeEngine:
         }
 
     def _restore(self, snap: dict) -> None:
-        self._queue = collections.deque(snap["queue"])
+        self._queues = {
+            tenant: collections.deque(q) for tenant, q in snap["queues"].items()
+        }
+        self._served = dict(snap["served"])
+        self._rr_last = snap["rr_last"]
+        self._pending_events = list(snap["pending_events"])
         for t, status, result, error, t_start, t_finish in snap["tickets"].values():
             t.status = status
             t.result = result
@@ -572,66 +715,115 @@ class SparseServeEngine:
         *,
         payload: Optional[Dict[str, np.ndarray]] = None,
         iters: Optional[int] = None,
-        tol: Optional[float] = None,
+        tol=_UNSET,
         timeout: Optional[float] = None,
+        tenant: str = "default",
         **config,
     ) -> Ticket:
-        """Admit one request; returns its :class:`Ticket`.
+        """Admit one request for ``tenant``; returns its :class:`Ticket`.
 
         Raises :class:`QueueFullError` when ``max_queue`` requests are
-        already waiting (typed load shedding), ``KeyError`` for an
-        unregistered graph or solver without a batch stepper —
-        admission-time errors raise, because the caller is still on the
-        line; errors only detectable at load time (payload shape, zero
-        diagonal) surface later as ``FAILED`` tickets.
+        already waiting, :class:`TenantQuotaError` when this tenant
+        alone holds ``tenant_quota`` of them (both typed load shedding
+        — and both checked only after already-expired queued tickets
+        are swept, so dead backlog never counts against live
+        admissions), ``KeyError`` for an unregistered graph or solver
+        without a batch stepper — admission-time errors raise, because
+        the caller is still on the line; errors only detectable at load
+        time (payload shape, zero diagonal) surface later as ``FAILED``
+        tickets.
+
+        ``tol`` semantics: omitted → the engine's ``default_tol``;
+        ``None`` → no early exit; ``0.0`` → stop on an exact-zero
+        residual; positive → stop strictly below it.
         """
-        if graph not in self._graphs:
-            known = ", ".join(sorted(self._graphs)) or "<none>"
-            raise KeyError(f"unknown graph {graph!r}; registered: {known}")
-        if solver not in STEPPERS:
-            raise KeyError(
-                f"solver {solver!r} has no batch stepper; steppable: "
-                f"{', '.join(sorted(STEPPERS.names()))}"
+        with self._lock:
+            if graph not in self._graphs:
+                known = ", ".join(sorted(self._graphs)) or "<none>"
+                raise KeyError(f"unknown graph {graph!r}; registered: {known}")
+            if solver not in STEPPERS:
+                raise KeyError(
+                    f"solver {solver!r} has no batch stepper; steppable: "
+                    f"{', '.join(sorted(STEPPERS.names()))}"
+                )
+            if iters is not None and iters < 1:
+                raise ValueError(f"iters must be >= 1, got {iters}")
+            if tol is _UNSET:
+                tol = self.default_tol
+            if tol is not None and float(tol) < 0.0:
+                raise ValueError(f"tol must be >= 0 or None, got {tol}")
+            now = self.clock()
+            # Bugfix (ISSUE 10): prune expired queued tickets *before*
+            # the bound checks — a burst of short-timeout requests must
+            # not trip QueueFullError on an effectively empty queue.
+            self._sweep_expired(now)
+            self._fire_events()
+            if sum(len(q) for q in self._queues.values()) >= self.max_queue:
+                self.metrics.rejected += 1
+                self.metrics.tenant(tenant).rejected += 1
+                raise QueueFullError(self.max_queue)
+            if (
+                self.tenant_quota is not None
+                and len(self._queues.get(tenant, ())) >= self.tenant_quota
+            ):
+                self.metrics.rejected += 1
+                self.metrics.tenant(tenant).rejected += 1
+                raise TenantQuotaError(tenant, self.tenant_quota)
+            ticket = Ticket(
+                tid=self._next_tid,
+                graph=graph,
+                solver=solver,
+                payload=dict(payload or {}),
+                config=tuple(sorted(config.items())),
+                iters=self.default_iters if iters is None else int(iters),
+                tol=None if tol is None else float(tol),
+                deadline=None if timeout is None else now + float(timeout),
+                tenant=str(tenant),
+                t_submit=now,
             )
-        if iters is not None and iters < 1:
-            raise ValueError(f"iters must be >= 1, got {iters}")
-        if len(self._queue) >= self.max_queue:
-            self.metrics.rejected += 1
-            raise QueueFullError(self.max_queue)
-        now = self.clock()
-        ticket = Ticket(
-            tid=self._next_tid,
-            graph=graph,
-            solver=solver,
-            payload=dict(payload or {}),
-            config=tuple(sorted(config.items())),
-            iters=self.default_iters if iters is None else int(iters),
-            tol=self.default_tol if tol is None else float(tol),
-            deadline=None if timeout is None else now + float(timeout),
-            t_submit=now,
-        )
-        self._next_tid += 1
-        self._queue.append(ticket)
-        self.metrics.submitted += 1
-        return ticket
+            self._next_tid += 1
+            self._queues.setdefault(ticket.tenant, collections.deque()).append(ticket)
+            self.metrics.submitted += 1
+            self.metrics.tenant(ticket.tenant).submitted += 1
+            self._work_event.set()
+            return ticket
 
     # -- scheduling --------------------------------------------------------
 
     def pending(self) -> int:
         """Waiting + running request count."""
-        running = sum(lane.occupied for lane in self._lanes.values())
-        return len(self._queue) + running
+        with self._lock:
+            running = sum(lane.occupied for lane in self._lanes.values())
+            return sum(len(q) for q in self._queues.values()) + running
+
+    def wait_for_work(self, timeout: Optional[float] = None) -> bool:
+        """Driver support: block until a submission arrives (or work is
+        already pending), at most ``timeout`` seconds. Returns whether
+        there is (probably) work. Deliberately *not* under the engine
+        lock — an idle driver sleeping here must never block
+        submitters."""
+        self._work_event.clear()
+        if self.pending():
+            return True
+        return self._work_event.wait(timeout)
+
+    def _queued_tickets(self) -> List[Ticket]:
+        return [t for q in self._queues.values() for t in q]
 
     def _fail(self, ticket: Ticket, err: Exception, now: float) -> None:
         ticket.status = Status.FAILED
         ticket.error = f"{type(err).__name__}: {err}"
         ticket.t_finish = now
         self.metrics.failed += 1
+        self.metrics.tenant(ticket.tenant).failed += 1
+        self._pending_events.append(ticket)
 
     def _expire(self, ticket: Ticket, now: float) -> None:
         ticket.status = Status.EXPIRED
         ticket.t_finish = now
         self.metrics.expired += 1
+        self.metrics.tenant(ticket.tenant).expired += 1
+        self._pending_events.append(ticket)
 
     def _finish(self, lane: _Lane, slot: int, now: float) -> None:
         ticket = lane.tickets[slot]
@@ -642,28 +834,71 @@ class SparseServeEngine:
             value=hist[-1] if hist else 0.0,
             residuals=list(hist),
             iters_run=len(hist),
-            converged=bool(ticket.tol and hist and hist[-1] < ticket.tol),
+            converged=bool(hist) and _hit_tol(ticket.tol, hist[-1]),
         )
         ticket.status = Status.DONE
         ticket.t_finish = now
         self.metrics.completed += 1
+        tm = self.metrics.tenant(ticket.tenant)
+        tm.completed += 1
+        if ticket.deadline is None or now <= ticket.deadline:
+            self.metrics.goodput += 1
+            tm.goodput += 1
         self.metrics.record_latency(
             wait=ticket.t_start - ticket.t_submit,
             run=now - ticket.t_start,
             total=now - ticket.t_submit,
+            tenant=ticket.tenant,
         )
+        self._pending_events.append(ticket)
         lane.retire(slot)
 
-    def _refill(self, now: float) -> None:
-        """Move queued tickets into free slots, FIFO per lane — a ticket
-        whose lane is full is skipped without blocking tickets behind it
-        bound for other lanes (no head-of-line blocking across
-        tenants)."""
-        still_waiting: List[Ticket] = []
-        for ticket in self._queue:
-            if ticket.deadline is not None and now > ticket.deadline:
-                self._expire(ticket, now)
-                continue
+    def _fire_events(self) -> None:
+        """Release waiters on tickets that reached a terminal status.
+        Called only after a guarded body commits (or from unguarded
+        admission paths), so a recovery rollback can never leave a
+        fired event on an un-finished ticket."""
+        done, self._pending_events = self._pending_events, []
+        for t in done:
+            t._event.set()
+
+    def _sweep_expired(self, now: float) -> None:
+        """Expire every queued ticket whose deadline has passed, and
+        drop tenants whose queue emptied (their service counter resets
+        — no carrying credit or debt while idle)."""
+        for tenant, q in list(self._queues.items()):
+            if any(t.deadline is not None and now > t.deadline for t in q):
+                keep = collections.deque()
+                for t in q:
+                    if t.deadline is not None and now > t.deadline:
+                        self._expire(t, now)
+                    else:
+                        keep.append(t)
+                self._queues[tenant] = keep
+        for tenant in [t for t, q in self._queues.items() if not q]:
+            del self._queues[tenant]
+            self._served.pop(tenant, None)
+
+    def _dequeue(self, ticket: Ticket) -> None:
+        q = self._queues.get(ticket.tenant)
+        if q is not None:
+            try:
+                q.remove(ticket)  # identity match: Ticket has eq=False
+            except ValueError:
+                pass
+            if not q:
+                del self._queues[ticket.tenant]
+                self._served.pop(ticket.tenant, None)
+
+    def _admit_one(self, cand: List[Ticket], now: float) -> bool:
+        """Place one tenant's best admissible candidate into a free
+        slot; candidates whose lane is full are skipped (no head-of-line
+        blocking across lanes), candidates that fail lane creation or
+        load are FAILED and removed without consuming the tenant's
+        turn. Returns whether a slot was filled."""
+        i = 0
+        while i < len(cand):
+            ticket = cand[i]
             key = ticket.lane_key
             lane = self._lanes.get(key)
             if lane is None:
@@ -673,29 +908,88 @@ class SparseServeEngine:
                         session, self.batch_slots, **dict(ticket.config)
                     )
                 except Exception as err:  # bad config (e.g. zero diagonal)
+                    self._dequeue(ticket)
+                    cand.pop(i)
                     self._fail(ticket, err, now)
                     continue
                 lane = self._lanes[key] = _Lane(stepper)
             slot = lane.free_slot()
             if slot is None:
-                still_waiting.append(ticket)
+                i += 1
                 continue
             try:
                 lane.load(slot, ticket)
             except Exception as err:  # bad payload; slot stays free
-                lane.retire(slot)
+                lane.retire(slot)  # idempotent no-op on the vacant slot
+                self._dequeue(ticket)
+                cand.pop(i)
                 self._fail(ticket, err, now)
                 continue
             ticket.status = Status.RUNNING
             ticket.t_start = now
-        self._queue = collections.deque(still_waiting)
+            self._dequeue(ticket)
+            cand.pop(i)
+            return True
+        return False
+
+    def _refill(self, now: float) -> None:
+        """Move queued tickets into free slots by deficit-weighted fair
+        queueing across tenants, earliest-deadline-first within each
+        tenant (deadline-less tickets keep FIFO order behind deadlined
+        ones).
+
+        Each admission charges the tenant ``1/weight`` of normalized
+        service; every free slot goes to the *least-served* (largest
+        deficit) backlogged tenant, with exact ties broken by rotating
+        past the last tenant granted a slot. Because selection is by
+        outstanding deficit — not queue-visit order — the weighted
+        shares hold even when slots free one at a time (pure
+        visit-order round-robin degrades to 1:1 there, whatever the
+        weights). Counters persist while a tenant stays backlogged and
+        reset when its queue drains; a newly backlogged tenant starts
+        at the current backlogged minimum, so it competes from "now"
+        rather than replaying history in a burst. Expired queued
+        tickets are swept first."""
+        self._sweep_expired(now)
+        if not self._queues:
+            return
+        cand = {
+            tenant: sorted(q, key=_edf_key) for tenant, q in self._queues.items()
+        }
+        floor = min(
+            (self._served[t] for t in cand if t in self._served), default=0.0
+        )
+        for tenant in cand:
+            self._served.setdefault(tenant, floor)
+        while True:
+            live = sorted(t for t in cand if cand[t])
+            if not live:
+                return
+            if self._rr_last in live:
+                pivot = live.index(self._rr_last) + 1
+                live = live[pivot:] + live[:pivot]
+            live.sort(key=lambda t: self._served[t])  # stable: ties keep rotation
+            admitted = False
+            for tenant in live:
+                if self._admit_one(cand[tenant], now):
+                    # _dequeue may have dropped the counter (queue
+                    # drained); charge only a still-backlogged tenant.
+                    if tenant in self._served:
+                        self._served[tenant] += 1.0 / self.tenant_weights.get(
+                            tenant, 1.0
+                        )
+                    self._rr_last = tenant
+                    admitted = True
+                    break  # re-rank: the next slot goes to the new minimum
+            if not admitted:
+                return
 
     def step(self) -> bool:
-        """One scheduling tick: expire/refill from the queue, then
+        """One scheduling tick: expire/refill from the queues, then
         advance every occupied lane by exactly one solver iteration
-        (one batched SpMM per lane). Returns whether any work was done
-        — ``False`` means idle (empty queue, empty lanes), mirroring
-        the LM engine's no-op step.
+        (one batched SpMM per lane). Returns whether any lane actually
+        stepped — ``False`` means idle, the signal a driver uses to
+        back off.
 
         Fault-tolerant engines do three more things per tick: units the
         heartbeat declared dead since the last tick are recovered up
@@ -704,21 +998,24 @@ class SparseServeEngine:
         (mid-tick :class:`WorkerFailure` → restore + recover + rerun,
         bitwise-identical because steppers are deterministic); and
         afterwards the straggler probe may demote a persistently slow
-        unit. Surviving units then heartbeat."""
-        if self.heartbeat is not None:
-            # Live units check in first (a long gap between ticks must
-            # not read as fleet-wide death); only units that stopped
-            # reporting — killed or marked silent — stay stale and trip
-            # the timeout.
-            for unit in self.heartbeat.last_seen:
-                if unit not in self.dead_units and unit not in self._silent_units:
-                    self.heartbeat.beat(unit)
-            for unit in self.heartbeat.dead_workers():
-                if unit not in self.dead_units:
-                    self._recover_unit_loss(unit)
-        worked = self._guard(self._step_inner)
-        self._probe_stragglers()
-        return worked
+        unit. Surviving units then heartbeat. Ticket completion events
+        fire only after the guarded body commits."""
+        with self._lock:
+            if self.heartbeat is not None:
+                # Live units check in first (a long gap between ticks must
+                # not read as fleet-wide death); only units that stopped
+                # reporting — killed or marked silent — stay stale and trip
+                # the timeout.
+                for unit in self.heartbeat.last_seen:
+                    if unit not in self.dead_units and unit not in self._silent_units:
+                        self.heartbeat.beat(unit)
+                for unit in self.heartbeat.dead_workers():
+                    if unit not in self.dead_units:
+                        self._recover_unit_loss(unit)
+            worked = self._guard(self._step_inner)
+            self._probe_stragglers()
+            self._fire_events()
+            return worked
 
     def _step_inner(self) -> bool:
         """The tick body (see :meth:`step` for scheduling semantics).
@@ -728,28 +1025,34 @@ class SparseServeEngine:
         creation order; the sort is stable). Within one tick every lane
         still advances exactly once, but the heavily loaded lanes run
         earliest, so their deadline checks see the least wall-clock
-        drift and their slots free up first for the next refill."""
+        drift and their slots free up first for the next refill.
+
+        Metrics contract: ``ticks`` counts ticks where at least one
+        lane stepped, and ``slot_ticks``/``slot_capacity`` accumulate
+        for exactly those lanes — so ``occupancy`` and per-tick rates
+        always agree (queue-only or cleanup-only ticks count nothing)."""
         now = self.clock()
         self._refill(now)
         self._fault_tick()  # kill point: slots loaded, nothing stepped
-        worked = bool(self._lanes)
-        queued = collections.Counter(t.lane_key for t in self._queue)
+        queued = collections.Counter(t.lane_key for t in self._queued_tickets())
         order = sorted(
             self._lanes,
             key=lambda k: self._lanes[k].occupied + queued[k],
             reverse=True,
         )
+        stepped = 0
         for key in order:
             lane = self._lanes[key]
             if lane.occupied == 0:
                 # Idle lane with nothing queued for it: drop, releasing
                 # the session reference so memo eviction can reclaim it.
-                if not any(t.lane_key == key for t in self._queue):
+                if not any(t.lane_key == key for t in self._queued_tickets()):
                     del self._lanes[key]
                 continue
             active = lane.active.copy()
             res = lane.stepper.step(active)
             self._fault_tick()  # kill point: mid-tick, one lane advanced
+            stepped += 1
             self.metrics.lane_steps += 1
             self.metrics.slot_iters += int(active.sum())
             after = self.clock()
@@ -757,7 +1060,7 @@ class SparseServeEngine:
                 ticket = lane.tickets[slot]
                 lane.residuals[slot].append(float(res[slot]))
                 lane.iters_done[slot] += 1
-                hit_tol = bool(ticket.tol and res[slot] < ticket.tol)
+                hit_tol = _hit_tol(ticket.tol, float(res[slot]))
                 exhausted = lane.iters_done[slot] >= lane.budget[slot]
                 if hit_tol or exhausted:
                     self._finish(lane, slot, after)
@@ -766,9 +1069,9 @@ class SparseServeEngine:
                     self._expire(ticket, after)
             self.metrics.slot_ticks += int(active.sum())
             self.metrics.slot_capacity += lane.slots
-        if worked or self._queue:
+        if stepped:
             self.metrics.ticks += 1
-        return worked
+        return stepped > 0
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         """Tick until every admitted request reached a terminal status.

@@ -16,7 +16,13 @@ import numpy as np
 import pytest
 
 from repro.api import STEPPERS, Topology, distribute, plancache, set_memo_limit
-from repro.serve import QueueFullError, SparseServeEngine, Status, percentile
+from repro.serve import (
+    QueueFullError,
+    SparseServeEngine,
+    Status,
+    TenantQuotaError,
+    percentile,
+)
 from repro.sparse.formats import COO
 
 N = 96
@@ -87,6 +93,7 @@ def test_every_registered_stepper_has_parity(engine, sessions):
         "pagerank": lambda: {"seeds": rng.random(N).astype(np.float32)},
         "jacobi": lambda: {"b": rng.random(N).astype(np.float32)},
         "spmv": lambda: {"x": rng.random(N).astype(np.float32)},
+        "cg": lambda: {"b": rng.random(N).astype(np.float32)},
     }
     assert set(payload_of) == set(STEPPERS.names()), (
         "new stepper registered without a parity payload here"
@@ -254,12 +261,14 @@ def test_deadline_expiry_queued_and_running(sessions):
         "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
         timeout=5.0,
     )
+    eng.step()  # t_run occupies the only slot
+    assert t_run.status is Status.RUNNING
+    # Submitted after t_run started: even with EDF refill (its deadline
+    # is earlier) it can only wait — the lone slot is taken.
     t_queued = eng.submit(
         "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
         timeout=1.0,
     )
-    eng.step()  # t_run occupies the only slot; t_queued waits
-    assert t_run.status is Status.RUNNING
     clk.advance(2.0)
     eng.step()  # queued deadline passed -> expired without ever running
     assert t_queued.status is Status.EXPIRED
@@ -449,6 +458,296 @@ def test_step_demand_order_busiest_lane_first(sessions):
     calls = _probe_step_order(eng)
     eng.step()
     assert calls == [g2, g1]  # backlog outranks creation order
+
+
+# ---------------------------------------------------------------------------
+# Admission bugfix regressions (ISSUE 10 satellites)
+
+
+def test_expired_backlog_does_not_trip_queue_full(sessions):
+    """Regression: ``submit`` used to count already-expired queued
+    tickets toward ``max_queue``, so a burst of short-timeout requests
+    shed fresh work off an effectively empty queue. Expired tickets
+    must be swept at admission, before the bound check."""
+    clk = FakeClock()
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=3, default_iters=4, clock=clk
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(40)
+    stale = [
+        eng.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)}, timeout=1.0,
+        )
+        for _ in range(3)
+    ]
+    clk.advance(2.0)  # every queued ticket is now past its deadline
+    fresh = eng.submit(  # failed before the fix: spurious QueueFullError
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+    )
+    assert all(t.status is Status.EXPIRED for t in stale)
+    assert all(t.t_start is None for t in stale)
+    assert eng.metrics.expired == 3 and eng.metrics.rejected == 0
+    eng.run_until_drained()
+    assert fresh.status is Status.DONE
+
+
+def test_tol_none_vs_zero_semantics(sessions):
+    """Regression: falsy checks silently treated ``tol=0.0`` as "no
+    tolerance". The explicit contract: ``tol=None`` never stops early
+    (and never reports ``converged``); ``tol=0.0`` stops on an
+    exact-zero residual, converged."""
+    eng = SparseServeEngine(batch_slots=4, max_queue=8, default_iters=64)
+    eng.register_graph("g1", sessions["g1"])
+    zero = np.zeros(N, np.float32)
+    rng = np.random.default_rng(41)
+    # b=0 drives Jacobi's residual to exactly 0.0 on the first sweep.
+    t_exact = eng.submit("g1", "jacobi", payload={"b": zero}, iters=64, tol=0.0)
+    t_off = eng.submit("g1", "jacobi", payload={"b": zero}, iters=64, tol=None)
+    # A generic rhs never hits exactly zero: tol=0.0 must NOT mean
+    # "stop immediately" either — it runs the full budget unconverged.
+    b = rng.random(N).astype(np.float32)
+    t_real = eng.submit("g1", "jacobi", payload={"b": b}, iters=8, tol=0.0)
+    eng.run_until_drained()
+    assert t_exact.result.iters_run == 1  # was 64 before the fix
+    assert t_exact.result.converged is True
+    assert t_exact.result.residuals == [0.0]
+    assert t_off.result.iters_run == 64
+    assert t_off.result.converged is False
+    assert t_real.result.iters_run == 8
+    assert t_real.result.converged is False
+    with pytest.raises(ValueError, match="tol"):
+        eng.submit("g1", "jacobi", payload={"b": b}, tol=-1e-3)
+
+
+def test_ticks_count_only_stepping_ticks(sessions):
+    """Regression: ``metrics.ticks`` used to increment on ticks where
+    no lane stepped (e.g. the cleanup tick that drops an idle lane)
+    while ``slot_ticks``/``slot_capacity`` didn't, skewing occupancy
+    and per-tick rates. Now all three accumulate for exactly the ticks
+    that stepped a lane."""
+    eng = SparseServeEngine(batch_slots=2, max_queue=8, default_iters=3)
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(42)
+    eng.submit(
+        "g1", "pagerank", payload={"seeds": rng.random(N).astype(np.float32)},
+        iters=3,
+    )
+    eng.run_until_drained()
+    assert eng.metrics.ticks == 3
+    assert eng.metrics.slot_capacity == 3 * eng.batch_slots  # same ticks
+    assert eng._lanes  # the drained lane sticks around until...
+    assert eng.step() is False  # ...this cleanup tick, which must not count
+    assert not eng._lanes
+    assert eng.metrics.ticks == 3  # was 4 before the fix
+    assert eng.metrics.slot_capacity == 3 * eng.batch_slots
+    assert eng.step() is False  # fully idle tick: still nothing
+    assert eng.metrics.ticks == 3
+
+
+def test_lane_retire_is_idempotent(sessions):
+    """Regression companion: the failed-``lane.load`` path retires a
+    slot that was never loaded; retire must be a provable no-op on a
+    vacant slot and safe to repeat."""
+    eng = SparseServeEngine(batch_slots=2, max_queue=4, default_iters=5)
+    eng.register_graph("g1", sessions["g1"])
+    t = eng.submit("g1", "jacobi", payload={"b": np.ones(N, np.float32)})
+    eng.step()
+    lane = next(iter(eng._lanes.values()))
+
+    def vacant(slot):
+        return (
+            lane.tickets[slot] is None
+            and not lane.active[slot]
+            and lane.iters_done[slot] == 0
+            and lane.budget[slot] == 0
+            and lane.residuals[slot] == []
+        )
+
+    assert vacant(1)
+    lane.retire(1)  # never loaded: must stay vacant, not crash
+    assert vacant(1) and lane.free_slot() == 1
+    slot = lane.tickets.index(t)
+    lane.retire(slot)
+    lane.retire(slot)  # double retire: same vacant state
+    assert vacant(slot)
+    assert lane.free_slot() is not None
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant fairness + SLA-aware refill
+
+
+def test_tenant_quota_typed_rejection(sessions):
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=16, tenant_quota=2, default_iters=3
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(43)
+
+    def sub(tenant):
+        return eng.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)}, tenant=tenant,
+        )
+
+    sub("ana"), sub("ana")
+    with pytest.raises(TenantQuotaError) as exc:
+        sub("ana")
+    assert exc.value.tenant == "ana" and exc.value.quota == 2
+    # The quota is per tenant: the engine still has room for others.
+    t_other = sub("bob")
+    assert t_other.status is Status.QUEUED
+    assert eng.metrics.rejected == 1
+    assert eng.metrics.tenant("ana").rejected == 1
+    assert eng.metrics.tenant("bob").rejected == 0
+    eng.run_until_drained()
+    assert eng.metrics.completed == 3
+
+
+def test_fair_refill_round_robins_across_tenants(sessions):
+    """One flooding tenant vs two one-shot victims on the same lane,
+    one slot: deficit round-robin admits the victims on the next free
+    slots instead of burning through the flood FIFO-style."""
+    clk = FakeClock()
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=64, default_iters=1, clock=clk
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(44)
+
+    def sub(tenant):
+        return eng.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)}, tenant=tenant,
+        )
+
+    flood = [sub("flood") for _ in range(6)]
+    victims = [sub("v1"), sub("v2")]
+    starts = []
+    while eng.pending():
+        eng.step()
+        clk.advance(1.0)
+    for t in flood + victims:
+        assert t.status is Status.DONE
+        starts.append((t.t_start, t.tenant))
+    order = [tenant for _, tenant in sorted(starts)]
+    # First slot goes to the flood (it rotated in first), but both
+    # victims are served on the immediately following slots — under the
+    # old global FIFO they'd have waited behind all six flood tickets.
+    assert order[:3] == ["flood", "v1", "v2"]
+    assert order[3:] == ["flood"] * 5
+
+
+def test_tenant_weights_skew_admission(sessions):
+    """A weight-2 tenant gets two admissions per rotation of a weight-1
+    tenant when both have backlog."""
+    clk = FakeClock()
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=64, default_iters=1, clock=clk,
+        tenant_weights={"heavy": 2.0},
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(45)
+
+    def sub(tenant):
+        return eng.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)}, tenant=tenant,
+        )
+
+    heavy = [sub("heavy") for _ in range(6)]
+    light = [sub("light") for _ in range(6)]
+    while eng.pending():
+        eng.step()
+        clk.advance(1.0)
+    order = [
+        t.tenant for t in sorted(heavy + light, key=lambda t: t.t_start)
+    ]
+    # Over the contested prefix, heavy holds a ~2:1 admission ratio.
+    prefix = order[:9]
+    assert prefix.count("heavy") == 6
+    assert prefix.count("light") == 3
+
+
+def test_edf_orders_within_tenant(sessions):
+    """Within one tenant's share: earliest deadline dispatches first;
+    deadline-less tickets keep FIFO order behind every deadlined one."""
+    clk = FakeClock()
+    eng = SparseServeEngine(
+        batch_slots=1, max_queue=16, default_iters=1, clock=clk
+    )
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(46)
+
+    def sub(timeout):
+        return eng.submit(
+            "g1", "pagerank",
+            payload={"seeds": rng.random(N).astype(np.float32)},
+            timeout=timeout,
+        )
+
+    t_lax = sub(100.0)
+    t_none_first = sub(None)
+    t_tight = sub(25.0)
+    t_none_second = sub(None)
+    t_mid = sub(50.0)
+    expect = [t_tight, t_mid, t_lax, t_none_first, t_none_second]
+    while eng.pending():
+        eng.step()
+        clk.advance(1.0)
+    assert all(t.status is Status.DONE for t in expect)
+    starts = [t.t_start for t in expect]
+    assert starts == sorted(starts)  # EDF, then FIFO for the deadline-less
+    m = eng.metrics.snapshot()
+    assert m["goodput"] == 5  # everyone beat (or had no) deadline
+    assert m["tenants"]["default"]["goodput"] == 5
+
+
+def test_per_tenant_metrics_in_snapshot(sessions):
+    eng = SparseServeEngine(batch_slots=2, max_queue=16, default_iters=2)
+    eng.register_graph("g1", sessions["g1"])
+    rng = np.random.default_rng(47)
+    for tenant, count in (("ana", 3), ("bob", 1)):
+        for _ in range(count):
+            eng.submit(
+                "g1", "pagerank",
+                payload={"seeds": rng.random(N).astype(np.float32)},
+                tenant=tenant,
+            )
+    eng.run_until_drained()
+    snap = eng.metrics.snapshot()
+    assert set(snap["tenants"]) == {"ana", "bob"}
+    ana, bob = snap["tenants"]["ana"], snap["tenants"]["bob"]
+    assert ana["submitted"] == ana["completed"] == 3
+    assert bob["submitted"] == bob["completed"] == 1
+    assert ana["goodput"] == 3 and bob["goodput"] == 1  # deadline-less
+    assert ana["total_p99_s"] >= ana["wait_p99_s"] >= 0.0
+    assert snap["completed"] == 4 and snap["goodput"] == 4
+
+
+def test_cg_engine_parity_across_executors(sessions):
+    """CG through the engine == direct batched-of-1 CG, bitwise, on
+    both the simulate and reference executors."""
+    rng = np.random.default_rng(48)
+    payloads = [rng.random(N).astype(np.float32) for _ in range(3)]
+    for executor in ("simulate", "reference"):
+        eng = SparseServeEngine(
+            batch_slots=2, max_queue=8, default_iters=6, executor=executor
+        )
+        eng.register_graph("g1", sessions["g1"])
+        tickets = [
+            eng.submit("g1", "cg", payload={"b": b}, iters=6) for b in payloads
+        ]
+        eng.run_until_drained()
+        sess = eng._session("g1")
+        assert sess.executor == executor
+        for t, b in zip(tickets, payloads):
+            assert t.status is Status.DONE
+            ref = sess.solve("cg", b=b[None], iters=6)
+            assert np.array_equal(t.result.x, ref.x[0]), executor
+            assert t.result.residuals == ref.residuals, executor
 
 
 def test_step_demand_order_stable_ties(sessions):
